@@ -1,0 +1,41 @@
+"""Shared benchmark scaffolding: paper workload, timing, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+TRIALS = int(os.environ.get("REPRO_BENCH_TRIALS", "100"))
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def paper_problem(rng: np.random.Generator):
+    """§V: A (100×8000) @ B (8000×100), i.i.d. N(0,1)."""
+    return rng.standard_normal((100, 8000)), rng.standard_normal((8000, 100))
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The required CSV row: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, us_per_call) — min over repeats."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def save_rows(fname: str, header: str, rows) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")

@@ -1,0 +1,31 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the full
+data tables under ``results/bench/``.  Trials default to the paper's 100;
+set REPRO_BENCH_TRIALS to trade fidelity for speed.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig2_error_sources, fig3a_tradeoff, fig3b_correlation,
+                   kernel_bench, table1_thresholds)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table1_thresholds, fig3a_tradeoff, fig2_error_sources,
+                fig3b_correlation, kernel_bench):
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"BENCH FAILURE in {mod.__name__}:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver (paper kind): a straggler-proof matmul service.
+
+Serves a stream of batched matmul requests through the SAC master/worker
+pipeline with shifted-exponential worker latencies and 20% persistent
+stragglers.  Answers refine over deadline ticks; compares SAC against
+classical MatDot (all-or-nothing) on time-to-first-answer.
+
+Run:  PYTHONPATH=src python examples/coded_matmul_service.py
+"""
+import numpy as np
+
+from repro.core import (GroupSACCode, MatDotCode, simulate_completion,
+                        split_contraction, x_complex)
+from repro.launch.serve import serve_request
+
+rng = np.random.default_rng(7)
+K, N = 8, 24
+deadlines = [1.15, 1.4, 1.8, 2.5, 4.0]
+
+sac = GroupSACCode(K, N, x_complex(N, 0.1), [4, 4], rng=rng)
+matdot = MatDotCode(K, N, x_complex(N, 0.1))
+
+print("== coded matmul service: SAC vs exact-only MatDot ==")
+print(f"   N={N} workers, 20% stragglers (5x slower), K={K}")
+ttfa = {"sac": [], "matdot": []}
+for req in range(10):
+    A = rng.standard_normal((100, 2000))
+    B = rng.standard_normal((2000, 100))
+    for label, code in (("sac", sac), ("matdot", matdot)):
+        res = serve_request(code, A, B, rng, deadlines=deadlines,
+                            straggler_frac=0.2)
+        first = next((dl for dl, m, err in res if err is not None), None)
+        exact = next((dl for dl, m, err in res
+                      if err is not None and err < 1e-6), None)
+        ttfa[label].append((first, exact))
+    f_s, e_s = ttfa["sac"][-1]
+    f_m, e_m = ttfa["matdot"][-1]
+    print(f" req {req}: SAC first answer @t={f_s}, exact @t={e_s} | "
+          f"MatDot first/exact @t={f_m}")
+
+f_sac = [f for f, _ in ttfa["sac"] if f]
+f_md = [f for f, _ in ttfa["matdot"] if f]
+print(f"\nmean time-to-first-answer: SAC {np.mean(f_sac):.2f} "
+      f"vs MatDot {np.mean(f_md) if f_md else float('nan'):.2f} "
+      f"(MatDot answered {len(f_md)}/10 within the deadline window)")

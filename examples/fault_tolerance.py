@@ -1,0 +1,38 @@
+"""Checkpoint/restart fault-tolerance demo: crash mid-run, resume, and land
+on the EXACT same trajectory (step-keyed data pipeline + atomic checkpoints).
+
+Run:  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import train
+
+cfg = get_arch("repro-100m", smoke=True)
+STEPS, CRASH_AT = 20, 10
+ckpt = tempfile.mkdtemp(prefix="repro_ft_")
+
+print("== run A: uninterrupted ==")
+_, _, losses_ref = train(cfg, steps=STEPS, batch=4, seq=128, ckpt_dir=None,
+                         resume=False, log_every=5)
+
+print(f"\n== run B: crash at step {CRASH_AT}, then resume ==")
+try:
+    train(cfg, steps=STEPS, batch=4, seq=128, ckpt_dir=ckpt, resume=False,
+          ckpt_every=5, simulate_failure_at=CRASH_AT, log_every=5)
+except SystemExit as e:
+    print(f"(crashed with exit code {e.code}, as scheduled)")
+
+_, _, losses_resumed = train(cfg, steps=STEPS, batch=4, seq=128,
+                             ckpt_dir=ckpt, resume=True, ckpt_every=5,
+                             log_every=5)
+
+tail_ref = losses_ref[-len(losses_resumed):]
+diff = float(np.max(np.abs(np.array(tail_ref) - np.array(losses_resumed))))
+print(f"\nmax |loss diff| on the resumed segment: {diff:.2e}")
+assert diff < 1e-5, "resume must reproduce the uninterrupted trajectory"
+print("OK: restart reproduces the uninterrupted run.")
+shutil.rmtree(ckpt, ignore_errors=True)

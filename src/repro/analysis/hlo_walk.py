@@ -1,0 +1,249 @@
+"""Trip-count-aware walk of optimized HLO: FLOPs / bytes / collective wire.
+
+XLA's ``cost_analysis()`` counts while-loop (lax.scan/map) bodies ONCE, which
+under-reports any scanned program (layers ×L, CE chunks ×n, attention block
+loops, SSM chunk scans).  This walker parses ``compiled.as_text()`` of the
+REAL program instead:
+
+* splits the module into computations and builds per-computation symbol
+  tables (op name → shape) so operand shapes resolve;
+* counts per-computation **dot FLOPs** (2 · |result| · |contracting dims| —
+  the MXU work; elementwise FLOPs are ignored by design), **bytes** (operands
+  + result of every non-trivial top-level op, a proxy for HBM traffic), and
+  **collective wire bytes** (ring-model, see roofline.py);
+* resolves ``while`` trip counts from the loop-condition's compare-constant
+  (scan lowers to ``i < N`` counters) and multiplies nested body costs;
+* follows ``call``/``fusion``/``conditional`` edges (max over branches);
+  ``to_apply`` reducers of collectives/reduces are not calls.
+
+Used by launch/dryrun.py for every cell's roofline terms.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .roofline import _DTYPE_BYTES, _group_size
+
+__all__ = ["analyze_hlo", "HLOCosts"]
+
+_COMP_START = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_WHILE_REFS = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_COUNT = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_REF = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy", "convert", "reshape", "after-all",
+                   "partition-id", "replica-id", "iota", "broadcast"}
+
+
+def _shape_info(type_str: str):
+    """(total bytes, list of dim-lists) for a (possibly tuple) type string."""
+    total = 0
+    dims_list = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dl = []
+        if dims:
+            for d in dims.split(","):
+                d = int(d)
+                dl.append(d)
+                n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_list.append(dl)
+    return total, dims_list
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: dict = field(default_factory=lambda: {
+        "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0})
+    n_coll: int = 0
+    whiles: list = field(default_factory=list)        # (cond, body)
+    calls: list = field(default_factory=list)         # comp names
+    branches: list = field(default_factory=list)      # [[names...], ...]
+    shapes: dict = field(default_factory=dict)        # op -> type str
+    trip_const: int | None = None                     # biggest s32 constant
+
+
+@dataclass
+class HLOCosts:
+    flops: float
+    bytes: float
+    wire: dict
+    n_collectives: int
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire.values())
+
+
+def _parse(hlo: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        if " = " not in raw:
+            m = _COMP_START.match(raw)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_LINE.match(raw)
+        if not mo:
+            continue
+        name, type_str, op = mo.groups()
+        cur.shapes[name] = type_str
+        if op == "constant":
+            mc = _CONSTANT.search(raw)
+            if mc:
+                v = int(mc.group(1))
+                if cur.trip_const is None or v > cur.trip_const:
+                    cur.trip_const = v
+            continue
+        res_bytes, res_dims = _shape_info(type_str)
+        # ---- collectives (ring wire model) -------------------------------
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in cur.wire:
+            n = _group_size(raw)
+            R = res_bytes
+            if base_op == "all-gather":
+                w = R * (n - 1) / n
+            elif base_op == "reduce-scatter":
+                w = R * (n - 1)
+            elif base_op == "all-reduce":
+                w = 2 * R * (n - 1) / n
+            elif base_op == "all-to-all":
+                w = R * (n - 1) / n
+            else:
+                w = R
+            if n > 1 or base_op == "collective-permute":
+                cur.wire[base_op] += w
+                cur.n_coll += 1
+        # ---- control flow -------------------------------------------------
+        if op == "while":
+            mw = _WHILE_REFS.search(raw)
+            if mw:
+                mt = _TRIP_COUNT.search(raw)    # XLA annotates scan loops
+                trip = int(mt.group(1)) if mt else None
+                cur.whiles.append((mw.group(1), mw.group(2), trip))
+            continue
+        if op == "conditional":
+            mb = _BRANCHES.search(raw)
+            if mb:
+                cur.branches.append(
+                    [b.strip().lstrip("%") for b in mb.group(1).split(",")])
+            continue
+        if op in ("call", "fusion", "async-start"):
+            mc = _CALL_REF.search(raw)
+            if mc:
+                cur.calls.append(mc.group(1))
+        # ---- dot flops -----------------------------------------------------
+        if op == "dot":
+            md = _DOT_CONTRACT.search(raw)
+            ops_m = re.search(r"dot\(([^)]*)\)", raw)
+            if md is not None and ops_m:
+                lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
+                lhs_type = cur.shapes.get(lhs_name, "")
+                _, lhs_dims = _shape_info(lhs_type)
+                contract = 1
+                if lhs_dims and md.group(1):
+                    for ci in md.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims[0]):
+                            contract *= lhs_dims[0][ci]
+                result_elems = 1
+                for dl in res_dims:
+                    for d in dl:
+                        result_elems *= d
+                cur.flops += 2.0 * result_elems * contract
+        # ---- bytes proxy ---------------------------------------------------
+        if op not in _SKIP_BYTES_OPS:
+            b = res_bytes
+            ops_m = _OPERANDS.search(raw[raw.index(op):])
+            if ops_m:
+                for o in ops_m.group(1).split(","):
+                    o = o.strip().lstrip("%")
+                    if o in cur.shapes:
+                        b += _shape_info(cur.shapes[o])[0]
+            cur.bytes += b
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or cond.trip_const is None:
+        return 1
+    return max(int(cond.trip_const), 1)
+
+
+def _resolve(comps: dict, name: str, memo: dict) -> tuple:
+    if name in memo:
+        return memo[name]
+    memo[name] = (0.0, 0.0, {k: 0.0 for k in
+                             ("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute")}, 0)
+    c = comps.get(name)
+    if c is None:
+        return memo[name]
+    fl, by = c.flops, c.bytes
+    wire = dict(c.wire)
+    ncoll = c.n_coll
+    for callee in c.calls:
+        f2, b2, w2, n2 = _resolve(comps, callee, memo)
+        fl += f2
+        by += b2
+        for k in wire:
+            wire[k] += w2[k]
+        ncoll += n2
+    for branch_set in c.branches:
+        best = None
+        for b in branch_set:
+            cand = _resolve(comps, b, memo)
+            if best is None or cand[0] > best[0]:
+                best = cand
+        if best:
+            fl += best[0]
+            by += best[1]
+            for k in wire:
+                wire[k] += best[2][k]
+            ncoll += best[3]
+    for cond, body, trip in c.whiles:
+        if trip is None:
+            trip = _trip_count(comps, cond)
+        f2, b2, w2, n2 = _resolve(comps, body, memo)
+        fl += trip * f2
+        by += trip * b2
+        for k in wire:
+            wire[k] += trip * w2[k]
+        ncoll += n2
+    memo[name] = (fl, by, wire, ncoll)
+    return memo[name]
+
+
+def analyze_hlo(hlo: str) -> HLOCosts:
+    comps = _parse(hlo)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:                                   # fall back: the largest comp
+        entry = max(comps, key=lambda n: comps[n].flops, default=None)
+    fl, by, wire, ncoll = _resolve(comps, entry, {})
+    return HLOCosts(flops=fl, bytes=by, wire=wire, n_collectives=ncoll)

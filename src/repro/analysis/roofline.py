@@ -1,0 +1,136 @@
+"""Roofline terms from the compiled dry-run artifact (EXPERIMENTS §Roofline).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).  All compiled quantities
+(cost_analysis, HLO shapes) are PER-DEVICE post-SPMD, so
+
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = bytes_per_device / HBM_BW
+    collective term = wire_bytes_per_device / ICI_BW
+
+which equals the assignment's global formulation (global = per-device × chips
+divided by chips × per-chip rate).
+
+Collective wire bytes use the standard ring-algorithm traffic model on the
+per-device HLO result shape ``R`` with group size ``n``:
+
+    all-gather        R·(n-1)/n        (result is the gathered tensor)
+    reduce-scatter    R·(n-1)          (operand = n·R enters the wire once)
+    all-reduce        2·R·(n-1)/n      (reduce-scatter + all-gather)
+    all-to-all        R·(n-1)/n
+    collective-permute R
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_wire_bytes", "roofline_terms", "HW"]
+
+HW = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # B/s per chip
+    "ici_bw": 50e9,            # B/s per link (one link direction)
+    "hbm_bytes": 16 * 2 ** 30,  # v5e HBM capacity
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        return max(len(first.split(",")), 1)
+    return 1
+
+
+def collective_wire_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, from optimized HLO."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "ops": 0}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+            r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute-start|"
+            r"collective-permute)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-start"):
+            op = op[:-6]
+        R = _shape_bytes(shape_str)
+        n = _group_size(stripped)
+        if n <= 1 and op != "collective-permute":
+            continue
+        if op == "all-gather":
+            wire = R * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = R * (n - 1)
+        elif op == "all-reduce":
+            wire = 2 * R * (n - 1) / n
+        elif op == "all-to-all":
+            wire = R * (n - 1) / n
+        else:  # collective-permute
+            wire = R
+        out[op] += wire
+        out["ops"] += 1
+    out["total_wire_bytes"] = sum(v for k, v in out.items()
+                                  if k not in ("ops", "total_wire_bytes"))
+    return out
+
+
+def roofline_terms(rec: dict) -> dict:
+    """The three terms (seconds) + dominance + useful-flops ratio."""
+    flops = rec["cost"]["flops_per_device"]
+    mem_bytes = rec["cost"]["bytes_accessed_per_device"]
+    wire = rec["collectives"]["total_wire_bytes"]
+    t_compute = flops / HW["peak_flops"]
+    t_memory = mem_bytes / HW["hbm_bw"]
+    t_collective = wire / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    # useful model flops: 6·N_active·D for train, 2·N_active·D for fwd-only,
+    # distributed over the chips
+    mult = {"train": 6, "prefill": 2, "decode": 2}[rec["kind"]]
+    useful_global = mult / 6 * rec["model_flops_per_token"] * rec["tokens"]
+    useful_per_dev = useful_global / rec["chips"]
+    terms.update({
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "useful_flops_per_device": useful_per_dev,
+        "useful_over_hlo_flops": (useful_per_dev / flops) if flops else 0.0,
+        "roofline_fraction": (useful_per_dev / HW["peak_flops"])
+        / terms[dominant] if terms[dominant] > 0 else 0.0,
+    })
+    return terms

@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned arch) + shape specs."""
+from .base import SHAPES, ArchConfig, ShapeSpec
+from .registry import ARCH_NAMES, PAPER_JOB, cells, get_arch, get_shape
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "ARCH_NAMES", "PAPER_JOB",
+           "cells", "get_arch", "get_shape"]

@@ -1,0 +1,41 @@
+"""Core SAC / CDC library — the paper's contribution.
+
+Public surface:
+
+* codes: :class:`MatDotCode`, :class:`EpsApproxMatDotCode`,
+  :class:`OrthoMatDotCode`, :class:`LagrangeCode`, :class:`GroupSACCode`,
+  :class:`LayerSACCode` (+ :func:`make_code` registry)
+* β rules (Thms. 1-2): :mod:`repro.core.beta`
+* decode linear algebra: :mod:`repro.core.solve`
+* simulation harness (paper §V): :mod:`repro.core.simulate`
+"""
+from .beta import (eq5_beta, group_beta, layer_beta, thm1_beta, thm1_moments,
+                   thm2_beta, thm2_gammas)
+from .codes.base import CDCCode, DecodeInfo
+from .codes.group_sac import GroupSACCode, group_thresholds
+from .codes.lagrange import LagrangeCode
+from .codes.layer_sac import LayerSACCode, clustered_points
+from .codes.matdot import EpsApproxMatDotCode, MatDotCode
+from .codes.orthomatdot import OrthoMatDotCode
+from .partition import block_outer_products, split_contraction
+from .points import x_complex, x_equal
+from .poly import (ChebyshevBasis, LagrangeBasis, MonomialBasis,
+                   chebyshev_roots)
+from .registry import CODE_NAMES, make_code, paper_fig3a_codes
+from .simulate import (ErrorCurves, average_curves, correlated_problem,
+                       random_problem, run_trace)
+from .solve import condition_number, extraction_weights, fit_coefficients
+from .straggler import CompletionTrace, simulate_completion
+
+__all__ = [
+    "CDCCode", "DecodeInfo", "MatDotCode", "EpsApproxMatDotCode",
+    "OrthoMatDotCode", "LagrangeCode", "GroupSACCode", "LayerSACCode",
+    "group_thresholds", "clustered_points", "make_code", "CODE_NAMES",
+    "paper_fig3a_codes", "x_equal", "x_complex", "split_contraction",
+    "block_outer_products", "thm1_beta", "thm1_moments", "thm2_beta",
+    "thm2_gammas", "group_beta", "layer_beta", "eq5_beta",
+    "extraction_weights", "fit_coefficients", "condition_number",
+    "ErrorCurves", "run_trace", "average_curves", "random_problem",
+    "correlated_problem", "CompletionTrace", "simulate_completion",
+    "chebyshev_roots", "MonomialBasis", "ChebyshevBasis", "LagrangeBasis",
+]

@@ -1,0 +1,140 @@
+"""Base class for polynomial CDC codes (paper §II).
+
+A code is specified by its encoding generator matrices ``G_A, G_B: (N, K)``
+(worker n's encoded operands are ``E_A[n] = Σ_k G_A[n,k] A_k`` etc.), its
+evaluation points, and its decode rule.  The decode rule is *always* exposed
+as extraction weights over completed worker products (see
+``repro.core.solve``), which is what lets the distributed runtime fold the
+decode into a weighted collective.
+
+Estimate protocol: ``estimate_weights(completed, m)`` returns ``(w, info)``
+with ``w: (m,)`` such that the **pre-β** estimate is
+``Σ_i w_i · P_{completed[i]}``; ``info`` carries whatever the β rule needs
+(recovered-pair count for Thm. 1, hit clusters for Thm. 2).  Returns ``None``
+below the code's first threshold.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from ..partition import block_outer_products, split_contraction
+
+__all__ = ["CDCCode", "DecodeInfo"]
+
+
+@dataclass
+class DecodeInfo:
+    """Metadata accompanying a set of decode weights."""
+
+    exact: bool                    # True iff m >= recovery threshold
+    m_pairs: int                   # recovered-pair count (Thm-1 m_l); K if exact
+    layer: int | None = None       # resolution-layer index (1-based), if defined
+    extra: dict[str, Any] = field(default_factory=dict)
+
+
+class CDCCode:
+    """Abstract polynomial CDC code for ``C = Σ_k A_k B_k``."""
+
+    name: str = "abstract"
+
+    def __init__(self, K: int, N: int, eval_points: np.ndarray):
+        if N < 1 or K < 1:
+            raise ValueError("need N >= 1 and K >= 1")
+        eval_points = np.asarray(eval_points)
+        if eval_points.shape != (N,):
+            raise ValueError(f"need {N} evaluation points, got {eval_points.shape}")
+        if len(np.unique(eval_points)) != N:
+            raise ValueError("evaluation points must be distinct")
+        self.K = K
+        self.N = N
+        self.eval_points = eval_points
+
+    # ---------------------------------------------------------------- encode
+    def generator(self) -> tuple[np.ndarray, np.ndarray]:
+        """``(G_A, G_B)`` each of shape ``(N, K)``."""
+        raise NotImplementedError
+
+    def encode(self, A_blocks, B_blocks):
+        """Encoded per-worker operands ``(E_A: (N,Nx,bz), E_B: (N,bz,Ny))``."""
+        G_A, G_B = self.generator()
+        E_A = np.einsum("nk,kij->nij", G_A, np.asarray(A_blocks))
+        E_B = np.einsum("nk,kij->nij", G_B, np.asarray(B_blocks))
+        return E_A, E_B
+
+    @staticmethod
+    def worker_products(E_A, E_B):
+        """Every worker's task: one encoded matmul.  (N, Nx, Ny)."""
+        return np.einsum("nij,njl->nil", E_A, E_B)
+
+    def run_workers(self, A, B):
+        """Convenience: split → encode → all worker products."""
+        A_blocks, B_blocks = split_contraction(A, B, self.K)
+        E_A, E_B = self.encode(A_blocks, B_blocks)
+        return self.worker_products(E_A, E_B)
+
+    # ------------------------------------------------------------ thresholds
+    @property
+    def recovery_threshold(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def first_threshold(self) -> int:
+        """Smallest m producing any estimate (= recovery threshold if no layers)."""
+        return self.recovery_threshold
+
+    @property
+    def n_layers(self) -> int:
+        """Number of resolution layers strictly before exact recovery."""
+        return max(0, self.recovery_threshold - self.first_threshold)
+
+    # ---------------------------------------------------------------- decode
+    def estimate_weights(self, completed: np.ndarray, m: int):
+        """Weights over the first ``m`` completed workers, or ``None``."""
+        raise NotImplementedError
+
+    def beta(self, info: DecodeInfo, m: int, mode: str = "one",
+             oracle: dict | None = None) -> float:
+        """β rule for this code family; overridden by SAC codes."""
+        return 1.0
+
+    def decode(self, products: np.ndarray, order: np.ndarray, m: int,
+               beta_mode: str = "one", oracle: dict | None = None):
+        """Estimate of ``A @ B`` from the ``m`` fastest workers (or ``None``).
+
+        ``products``: (N, Nx, Ny) all worker products (only the completed
+        entries are read); ``order``: completion order.
+        """
+        completed = np.asarray(order)[:m]
+        res = self.estimate_weights(completed, m)
+        if res is None:
+            return None
+        w, info = res
+        est = np.einsum("m,mij->ij", w, np.asarray(products)[completed[:len(w)]])
+        b = self.beta(info, m, beta_mode, oracle)
+        est = b * est
+        return np.real(est) if np.iscomplexobj(est) else est
+
+    # ------------------------------------------------- analytic (ideal) path
+    def ideal_estimate(self, order: np.ndarray, m: int, A_blocks, B_blocks,
+                       beta_mode: str = "one", oracle: dict | None = None):
+        """The paper's ``C_m``: best analytically-derivable approximation.
+
+        Infinite-precision limit of :meth:`decode` — no Vandermonde solve, no
+        ε truncation.  Default: exact C at/above the recovery threshold.
+        """
+        if m >= self.recovery_threshold:
+            return np.einsum("kij,kjl->il", np.asarray(A_blocks), np.asarray(B_blocks))
+        return None
+
+    # ------------------------------------------------------------- utilities
+    def oracle_context(self, A_blocks, B_blocks) -> dict:
+        """Precomputed quantities the β oracle / ideal path may need."""
+        return {"block_products": block_outer_products(np.asarray(A_blocks),
+                                                       np.asarray(B_blocks))}
+
+    def __repr__(self):
+        return (f"{type(self).__name__}(K={self.K}, N={self.N}, "
+                f"R={self.recovery_threshold}, first={self.first_threshold})")

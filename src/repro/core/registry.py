@@ -1,0 +1,56 @@
+"""Factory registry for the CDC schemes benchmarked in the paper (Table I)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .codes.group_sac import GroupSACCode
+from .codes.lagrange import LagrangeCode
+from .codes.layer_sac import LayerSACCode
+from .codes.matdot import EpsApproxMatDotCode, MatDotCode
+from .codes.orthomatdot import OrthoMatDotCode
+from .points import x_complex
+
+__all__ = ["make_code", "CODE_NAMES", "paper_fig3a_codes"]
+
+CODE_NAMES = ("matdot", "eps_matdot", "orthomatdot", "lagrange",
+              "group_sac", "layer_sac_ortho", "layer_sac_lagrange")
+
+
+def make_code(name: str, K: int, N: int, *, eval_points=None,
+              rng: np.random.Generator | None = None, **kw):
+    if name == "matdot":
+        return MatDotCode(K, N, eval_points, **kw)
+    if name == "eps_matdot":
+        return EpsApproxMatDotCode(K, N, eval_points, **kw)
+    if name == "orthomatdot":
+        return OrthoMatDotCode(K, N, eval_points)
+    if name == "lagrange":
+        return LagrangeCode(K, N, eval_points, **kw)
+    if name == "group_sac":
+        return GroupSACCode(K, N, eval_points, rng=rng, **kw)
+    if name == "layer_sac_ortho":
+        return LayerSACCode(K, N, base="ortho", **kw)
+    if name == "layer_sac_lagrange":
+        return LayerSACCode(K, N, base="lagrange", **kw)
+    raise ValueError(f"unknown code {name!r}; known: {CODE_NAMES}")
+
+
+def paper_fig3a_codes(K: int = 8, N: int = 24):
+    """The five curves of Fig. 3a, with the paper's exact settings."""
+    xc = x_complex(N, 0.1)                       # X_complex = {0.1 e^{i2πn/N}}
+
+    def gsac_k1(k1):
+        def f(rng):
+            return GroupSACCode(K, N, xc, [k1, K - k1] if k1 < K else [K],
+                                rng=rng)
+        return f
+
+    return {
+        "eps_matdot": lambda rng: EpsApproxMatDotCode(K, N, xc),
+        "gsac_k1_8": gsac_k1(8),
+        "gsac_k1_5": gsac_k1(5),
+        "lsac_ortho": lambda rng: LayerSACCode(K, N, base="ortho",
+                                               eps=6.25e-3),
+        "lsac_lagrange": lambda rng: LayerSACCode(K, N, base="lagrange",
+                                                  eps=3.33e-2),
+    }

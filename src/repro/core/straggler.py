@@ -1,0 +1,79 @@
+"""Straggler / completion-order models (paper §V simulation protocol).
+
+The paper shuffles the N evaluated decoding polynomials uniformly — the m-th
+element is the one computed by the m-th fastest worker.  We reproduce that
+(``uniform_order``) and add the shifted-exponential latency model standard in
+the CDC literature [1], used by the wall-clock serving simulations and the
+fault-tolerance demos.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["uniform_order", "shifted_exp_times", "order_from_times",
+           "CompletionTrace", "simulate_completion"]
+
+
+def uniform_order(rng: np.random.Generator, N: int) -> np.ndarray:
+    """Uniformly random completion order: ``order[m]`` = worker finishing m-th."""
+    return rng.permutation(N)
+
+
+def shifted_exp_times(rng: np.random.Generator, N: int, *, shift: float = 1.0,
+                      rate: float = 1.0,
+                      straggler_frac: float = 0.0,
+                      straggler_slowdown: float = 5.0) -> np.ndarray:
+    """Per-worker completion times ``t_n = shift + Exp(rate)``.
+
+    A fraction of workers can be made persistent stragglers (× slowdown) to
+    model bad hosts — the failure mode SAC is designed to ride through.
+    """
+    t = shift + rng.exponential(1.0 / rate, size=N)
+    if straggler_frac > 0:
+        k = int(round(straggler_frac * N))
+        idx = rng.choice(N, size=k, replace=False)
+        t[idx] *= straggler_slowdown
+    return t
+
+
+def order_from_times(times: np.ndarray) -> np.ndarray:
+    return np.argsort(times, kind="stable")
+
+
+@dataclass
+class CompletionTrace:
+    """A realized completion process for one coded job."""
+
+    order: np.ndarray           # (N,) worker index finishing m-th
+    times: np.ndarray | None    # (N,) per-worker completion time (or None)
+
+    @property
+    def N(self) -> int:
+        return len(self.order)
+
+    def completed(self, m: int) -> np.ndarray:
+        """Indices of the m fastest workers, in completion order."""
+        return self.order[:m]
+
+    def mask(self, m: int) -> np.ndarray:
+        out = np.zeros(self.N, dtype=bool)
+        out[self.order[:m]] = True
+        return out
+
+    def time_of(self, m: int) -> float:
+        """Wall-clock time at which the m-th completion happens."""
+        if self.times is None:
+            return float(m)
+        return float(np.sort(self.times)[m - 1])
+
+
+def simulate_completion(rng: np.random.Generator, N: int, *,
+                        model: str = "uniform", **kw) -> CompletionTrace:
+    if model == "uniform":
+        return CompletionTrace(order=uniform_order(rng, N), times=None)
+    if model == "shifted_exp":
+        t = shifted_exp_times(rng, N, **kw)
+        return CompletionTrace(order=order_from_times(t), times=t)
+    raise ValueError(f"unknown completion model {model!r}")

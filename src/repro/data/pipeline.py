@@ -1,0 +1,70 @@
+"""Synthetic token pipeline — deterministic, shardable, restart-safe.
+
+A real deployment would stream tokenized shards; here the substrate generates
+reproducible synthetic batches keyed by (seed, step) so that (a) a restarted
+job resumes on exactly the data it would have seen (checkpoint stores only
+the step), and (b) every data-parallel shard draws a disjoint stream.  The
+generator is jit-able (threefry) and produced directly at the right sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticTokens", "make_batch_specs"]
+
+
+@dataclass
+class SyntheticTokens:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_codebooks: int = 0
+    vision_tokens: int = 0
+    d_model: int = 0            # for vision embeds
+
+    def batch_shape(self):
+        if self.n_codebooks:
+            return (self.global_batch, self.seq_len, self.n_codebooks)
+        return (self.global_batch, self.seq_len)
+
+    def __call__(self, step: int):
+        """Global numpy batch for ``step`` (host-side; sharded by the caller)."""
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        batch = {"tokens": rng.integers(
+            0, self.vocab_size, size=self.batch_shape(), dtype=np.int32)}
+        if self.vision_tokens:
+            batch["vision_embeds"] = rng.standard_normal(
+                (self.global_batch, self.vision_tokens, self.d_model)
+            ).astype(np.float32)
+        return batch
+
+    def jit_batch(self, step):
+        """In-graph variant (threefry) — used by the fused train driver."""
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        batch = {"tokens": jax.random.randint(
+            key, self.batch_shape(), 0, self.vocab_size, dtype=jnp.int32)}
+        if self.vision_tokens:
+            batch["vision_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 1),
+                (self.global_batch, self.vision_tokens, self.d_model),
+                jnp.float32)
+        return batch
+
+
+def make_batch_specs(cfg, shape, dtype=jnp.int32):
+    """ShapeDtypeStructs for one global batch — the dry-run ``input_specs``."""
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        toks = jax.ShapeDtypeStruct((B, L, cfg.n_codebooks), dtype)
+    else:
+        toks = jax.ShapeDtypeStruct((B, L), dtype)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return batch

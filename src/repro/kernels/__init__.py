@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three files: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd dispatcher: Pallas on TPU, jnp oracle elsewhere) and
+``ref.py`` (the pure-jnp oracle used by the allclose tests).
+"""
+from .coded_matmul.ops import worker_products, worker_products_complex
+from .flash_attention.ops import flash_attention
+from .poly_encode.ops import poly_encode
+from .ssm_scan.ops import ssm_scan
+
+__all__ = ["worker_products", "worker_products_complex", "poly_encode",
+           "ssm_scan", "flash_attention"]

@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (blockwise online softmax), GQA + windows.
+
+Used by the 32k-prefill and long-context shapes: attention memory stays
+O(bq·bkv) instead of O(L²).  Grid ``(B, H, Lq/bq, Lkv/bkv)`` with the KV axis
+innermost; running max ``m``, denominator ``l`` and output accumulator carry
+in VMEM scratch across KV steps.
+
+* GQA: the KV block index map folds the head group (``h // group``), so KV
+  tiles are fetched once per group on chip.
+* causal + sliding-window masks are computed from absolute positions with a
+  ``q_offset`` so the same kernel serves prefill (offset 0) and suffix decode
+  (offset = Lkv - Lq).
+* fully-masked KV blocks still occupy grid steps but skip the FLOPs via
+  ``pl.when`` (documented in the roofline notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, bq: int, bkv: int, n_kv: int, q_offset: int,
+                  window: int | None, causal: bool, Lkv: int):
+    kv_i = pl.program_id(3)
+    q_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = q_i * bq + q_offset
+    kv_start = kv_i * bkv
+    # block-level skip: causal ⇒ no work if the whole KV block is in the
+    # future; window ⇒ no work if the whole block is out of the window.
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(q_start + bq - 1 >= kv_start)
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, jnp.asarray(q_start - (kv_start + bkv - 1) < window))
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        # zero KV padding rows: undefined pad values would otherwise reach the
+        # accumulator through 0·NaN in p @ v (scores are masked separately).
+        kv_valid = (kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bkv, 1), 0)) < Lkv
+        k = jnp.where(kv_valid, k, 0.0)
+        v = jnp.where(kv_valid, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kpos < Lkv                      # KV remainder-block bounds
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - safe_m))
+        m_ref[...] = m_new
+        l_ref[...] = corr * l_prev + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "bq", "bkv", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None, q_offset: int = 0,
+                           bq: int = 512, bkv: int = 512,
+                           interpret: bool = False):
+    """q (B, H, Lq, d); k, v (B, Hkv, Lkv, d) → (B, H, Lq, d)."""
+    B, H, Lq, d = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    if H % Hkv != 0:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
+    group = H // Hkv
+    bq, bkv = min(bq, Lq), min(bkv, Lkv)
+    grid = (B, H, pl.cdiv(Lq, bq), pl.cdiv(Lkv, bkv))
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
+                          n_kv=grid[3], q_offset=q_offset, window=window,
+                          causal=causal, Lkv=Lkv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

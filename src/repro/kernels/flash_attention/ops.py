@@ -1,0 +1,21 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, use_pallas: bool | None = None,
+                    interpret: bool = False, **block_kw):
+    if (use_pallas if use_pallas is not None
+            else jax.default_backend() == "tpu"):
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, interpret=interpret,
+                                      **block_kw)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)

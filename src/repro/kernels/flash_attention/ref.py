@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for (GQA, causal, windowed) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0):
+    """Materialized-scores attention.  q (B,H,Lq,d), k/v (B,Hkv,Lkv,d)."""
+    B, H, Lq, d = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    group = H // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (d ** 0.5)
+    qpos = q_offset + jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    denom = p.sum(-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

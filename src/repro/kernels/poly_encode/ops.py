@@ -1,0 +1,18 @@
+"""Jitted public wrapper for polynomial encoding."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import poly_encode_pallas
+from .ref import poly_encode_ref
+
+__all__ = ["poly_encode"]
+
+
+def poly_encode(G: jax.Array, X: jax.Array, *, use_pallas: bool | None = None,
+                interpret: bool = False, **block_kw) -> jax.Array:
+    """Encode K blocks into W worker operands with generator G."""
+    if (use_pallas if use_pallas is not None
+            else jax.default_backend() == "tpu"):
+        return poly_encode_pallas(G, X, interpret=interpret, **block_kw)
+    return poly_encode_ref(G, X)

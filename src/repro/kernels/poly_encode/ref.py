@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for polynomial encoding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["poly_encode_ref"]
+
+
+def poly_encode_ref(G: jax.Array, X: jax.Array) -> jax.Array:
+    """``E[n] = Σ_k G[n,k] X[k]``: (W, K) × (K, R, C) → (W, R, C)."""
+    return jnp.einsum("wk,krc->wrc", G.astype(jnp.float32),
+                      X.astype(jnp.float32)).astype(X.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan (falcon-mamba / hymba).
+
+Recurrence (diagonal state-space, per channel d and state s):
+
+    h_t = exp(Δ_t[d] · A[d,s]) · h_{t-1} + Δ_t[d] · x_t[d] · B_t[s]
+    y_t[d] = Σ_s h_t[d,s] · C_t[s]  + D[d] · x_t[d]
+
+The scan is sequential in t — the TPU adaptation keeps the state ``h`` for a
+channel tile resident in VMEM and streams the sequence through it:
+
+* grid ``(B, D/bd, L/bl)`` — sequence chunks innermost; ``h`` is a VMEM
+  scratch carried across chunk steps (Pallas revisiting semantics).
+* within a chunk, a ``fori_loop`` steps through time; all operands for the
+  chunk (``bl × bd`` activations, ``bl × S`` B/C) are VMEM-resident blocks.
+* channel tile ``bd`` defaults to 512 → state tile 512×16 f32 = 32 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_pallas"]
+
+
+def _ssm_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_ref, *,
+                bl: int):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...].astype(jnp.float32)          # (bd, S)
+    Dskip = D_ref[...].astype(jnp.float32)      # (bd,)
+
+    def step(t, h):
+        x_t = x_ref[0, t, :].astype(jnp.float32)      # (bd,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)    # (bd,)
+        B_t = B_ref[0, t, :].astype(jnp.float32)      # (S,)
+        C_t = C_ref[0, t, :].astype(jnp.float32)      # (S,)
+        decay = jnp.exp(dt_t[:, None] * A)            # (bd, S)
+        h = decay * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y_t = (h * C_t[None, :]).sum(axis=1) + Dskip * x_t
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, bl, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bl", "interpret"))
+def ssm_scan_pallas(x, dt, A, B, C, D, *, bd: int = 512, bl: int = 256,
+                    interpret: bool = False):
+    """Selective scan.  Shapes: x/dt (Bt, L, Dm), A (Dm, S), B/C (Bt, L, S),
+    D (Dm,) → y (Bt, L, Dm)."""
+    Bt, L, Dm = x.shape
+    S = A.shape[1]
+    bd, bl = min(bd, Dm), min(bl, L)
+    # zero-pad the time dim: a padded step has Δ=0 ⇒ decay=1, input 0 — the
+    # carried state h passes through unchanged (y on padded rows is sliced).
+    L_orig = L
+    if L % bl:
+        pad = bl - L % bl
+        zpad3 = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, dt, B, C = zpad3(x), zpad3(dt), zpad3(B), zpad3(C)
+        L += pad
+    grid = (Bt, pl.cdiv(Dm, bd), pl.cdiv(L, bl))
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, bl=bl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bl, bd), lambda b, d, l: (b, l, d)),   # x
+            pl.BlockSpec((1, bl, bd), lambda b, d, l: (b, l, d)),   # dt
+            pl.BlockSpec((bd, S), lambda b, d, l: (d, 0)),          # A
+            pl.BlockSpec((1, bl, S), lambda b, d, l: (b, l, 0)),    # B
+            pl.BlockSpec((1, bl, S), lambda b, d, l: (b, l, 0)),    # C
+            pl.BlockSpec((bd,), lambda b, d, l: (d,)),              # D
+        ],
+        out_specs=pl.BlockSpec((1, bl, bd), lambda b, d, l: (b, l, d)),
+        out_shape=jax.ShapeDtypeStruct((Bt, L, Dm), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, S), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)[:, :L_orig, :]

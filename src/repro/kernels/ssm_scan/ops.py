@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the selective scan."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssm_scan_pallas
+from .ref import ssm_scan_ref, ssm_step_ref
+
+__all__ = ["ssm_scan", "ssm_step_ref"]
+
+
+def ssm_scan(x, dt, A, B, C, D, *, use_pallas: bool | None = None,
+             interpret: bool = False, return_final: bool = False, **block_kw):
+    if return_final:
+        # prefill hand-off needs the final state; the ref scan provides it
+        return ssm_scan_ref(x, dt, A, B, C, D, return_final=True)
+    if (use_pallas if use_pallas is not None
+            else jax.default_backend() == "tpu"):
+        return ssm_scan_pallas(x, dt, A, B, C, D, interpret=interpret,
+                               **block_kw)
+    return ssm_scan_ref(x, dt, A, B, C, D)

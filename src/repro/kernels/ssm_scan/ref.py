@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_ref", "ssm_step_ref"]
+
+
+def ssm_step_ref(h, x_t, dt_t, A, B_t, C_t, D):
+    """One recurrence step (used by the decode path).
+
+    h (Bt, Dm, S); x_t/dt_t (Bt, Dm); B_t/C_t (Bt, S) → (h', y_t (Bt, Dm)).
+    """
+    decay = jnp.exp(dt_t[..., None] * A[None])            # (Bt, Dm, S)
+    h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+    y = (h * C_t[:, None, :]).sum(-1) + D[None] * x_t
+    return h, y
+
+
+def ssm_scan_ref(x, dt, A, B, C, D, *, return_final: bool = False,
+                 chunk: int = 256):
+    """Full-sequence scan.  Same shapes as the kernel.
+
+    The time loop is chunked with per-chunk rematerialization (√L-style
+    checkpointing): without it AD stacks an (L, Bt, Dm, S) residual per step
+    — measured 97 GiB/device on falcon-mamba train_4k (EXPERIMENTS §Perf).
+    ``return_final=True`` additionally returns the final state h (Bt, Dm, S)
+    — used by the serving prefill to hand off to the decode recurrence.
+    """
+    Bt, L, Dm = x.shape
+    S = A.shape[1]
+    f32 = jnp.float32
+    h0 = jnp.zeros((Bt, Dm, S), f32)
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:  # Δ=0 padding passes the state through unchanged (y sliced off)
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+    nc = x.shape[1] // chunk
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        h, y = ssm_step_ref(h, x_t.astype(f32), dt_t.astype(f32),
+                            A.astype(f32), B_t.astype(f32), C_t.astype(f32),
+                            D.astype(f32))
+        return h, y
+
+    @jax.checkpoint
+    def chunk_step(h, inp_chunk):
+        return jax.lax.scan(step, h, inp_chunk)
+
+    def to_chunks(t):                       # (Bt, L, F) -> (nc, chunk, Bt, F)
+        return jnp.moveaxis(t.reshape(Bt, nc, chunk, -1), 0, 2)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(B), to_chunks(C))
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)  # ys (nc, chunk, Bt, Dm)
+    y = jnp.moveaxis(ys.reshape(nc * (chunk), Bt, Dm), 0, 1)[:, :L]
+    y = y.astype(x.dtype)
+    return (y, h_final) if return_final else y

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The ONLY module that forces 512 host devices (first two lines, before any
+jax-importing code) — smoke tests and benches see 1 device.
+
+Per cell this: builds abstract params/optimizer/batch ShapeDtypeStructs
+(never allocating), jit-lowers the train/prefill/serve step with the
+production in/out shardings, compiles, and records
+
+* ``memory_analysis()``  — per-device argument/output/temp bytes (fits?),
+* ``cost_analysis()``    — per-device HLO FLOPs + bytes accessed,
+* collective wire bytes  — parsed from the optimized HLO (see
+  ``repro.analysis.roofline`` for the per-op wire-traffic model),
+
+into ``results/dryrun/<arch>__<shape>__<mesh>.json`` for §Dry-run/§Roofline.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh both
+    python -m repro.launch.dryrun --all --mesh single
+    python -m repro.launch.dryrun --all --mesh multi --skip-existing
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_walk import analyze_hlo
+from repro.analysis.roofline import collective_wire_bytes, roofline_terms
+from repro.configs import SHAPES, cells, get_arch, get_shape
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim.adamw import AdamWState
+from repro.runtime import sharding as shd
+from repro.runtime.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def input_specs(arch_name: str, shape_name: str, *, coded: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_arch(arch_name)
+    if coded:
+        cfg = cfg.replace(coded=True)
+    shape = get_shape(shape_name)
+    batch = make_batch_specs(cfg, shape)
+    if coded and not cfg.has_moe and cfg.d_ff:
+        batch["coded_weights"] = jax.ShapeDtypeStruct((16,), jnp.float32)
+    params = lm.abstract_params(cfg)
+    if shape.kind == "train":
+        opt = jax.eval_shape(
+            lambda p: AdamWState(
+                step=jnp.zeros((), jnp.int32),
+                m=jax.tree.map(lambda x: jnp.zeros(x.shape, cfg.opt_dtype), p),
+                v=jax.tree.map(lambda x: jnp.zeros(x.shape, cfg.opt_dtype), p)),
+            params)
+        step_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        return cfg, shape, {"params": params, "opt_state": opt,
+                            "batch": batch, "step": step_scalar}
+    if shape.kind == "prefill":
+        return cfg, shape, {"params": params, "batch": batch}
+    # decode: one new token with a seq_len-deep cache
+    B = shape.global_batch
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    state = jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, B, shape.seq_len))
+    return cfg, shape, {"params": params,
+                        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+                        "state": state}
+
+
+def build_lowerable(cfg, shape, specs, mesh):
+    """(jitted_fn, ordered_abstract_args) with production shardings."""
+    p_sh = shd.param_shardings(cfg, mesh, specs["params"])
+    repl = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        step = make_train_step(cfg)
+        o_sh = shd.opt_state_shardings(cfg, mesh, p_sh)
+        b_sh = shd.batch_shardings(cfg, mesh, specs["batch"])
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, o_sh, b_sh, repl),
+                     out_shardings=(p_sh, o_sh, repl),
+                     donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt_state"], specs["batch"],
+                specs["step"])
+        return fn, args
+    if shape.kind == "prefill":
+        stepfn = make_prefill_step(cfg, max_seq=shape.seq_len)
+        b_sh = shd.batch_shardings(cfg, mesh, specs["batch"])
+        state_spec = jax.eval_shape(
+            lambda p, b: stepfn(p, b), specs["params"], specs["batch"])
+        out_sh = jax.tree.map(lambda _: None, state_spec)  # let GSPMD choose
+        fn = jax.jit(stepfn, in_shardings=(p_sh, b_sh))
+        return fn, (specs["params"], specs["batch"])
+    # decode
+    stepfn = make_decode_step(cfg)
+    s_sh = shd.decode_state_shardings(cfg, mesh, specs["state"])
+    t_sh = shd.batch_shardings(cfg, mesh, {"t": specs["tokens"]})["t"]
+    fn = jax.jit(stepfn, in_shardings=(p_sh, t_sh, s_sh),
+                 donate_argnums=(2,))
+    return fn, (specs["params"], specs["tokens"], specs["state"])
+
+
+def _prefill_cost_proxy(cfg):
+    """Forward + last-token logits — the prefill's FLOP content without the
+    cache plumbing (cache writes are memory ops), unrollable for costing."""
+    def proxy(params, batch):
+        tokens = batch["tokens"]
+        x = lm.embed_tokens(params, tokens, cfg)
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(x.dtype), x], axis=1)
+        B, L = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        h, _ = lm.forward_hidden(params, x, cfg, pos)
+        if cfg.n_codebooks:
+            return jnp.stack([lm.compute_logits(params, h[:, -1:], cfg, c)
+                              for c in range(cfg.n_codebooks)], axis=2)
+        return lm.compute_logits(params, h[:, -1:], cfg)
+    return proxy
+
+
+def _compile_stats(cfg, shape, mesh):
+    """Lower + compile one variant; return (memory, cost, collectives)."""
+    specs = _specs_for(cfg, shape)
+    if cfg.cost_mode and shape.kind == "prefill":
+        p_sh = shd.param_shardings(cfg, mesh, specs["params"])
+        b_sh = shd.batch_shardings(cfg, mesh, specs["batch"])
+        fn = jax.jit(_prefill_cost_proxy(cfg), in_shardings=(p_sh, b_sh))
+        args = (specs["params"], specs["batch"])
+    else:
+        fn, args = build_lowerable(cfg, shape, specs, mesh)
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_wire_bytes(compiled.as_text())
+    return mem, cost, coll
+
+
+def _specs_for(cfg, shape):
+    batch = make_batch_specs(cfg, shape)
+    if cfg.coded and not cfg.has_moe and cfg.d_ff:
+        batch["coded_weights"] = jax.ShapeDtypeStruct((16,), jnp.float32)
+    params = lm.abstract_params(cfg)
+    if shape.kind == "train":
+        opt = jax.eval_shape(
+            lambda p: AdamWState(
+                step=jnp.zeros((), jnp.int32),
+                m=jax.tree.map(lambda x: jnp.zeros(x.shape, cfg.opt_dtype), p),
+                v=jax.tree.map(lambda x: jnp.zeros(x.shape, cfg.opt_dtype), p)),
+            params)
+        return {"params": params, "opt_state": opt, "batch": batch,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch}
+    B = shape.global_batch
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    state = jax.eval_shape(lambda: lm.init_decode_state(cfg, B, shape.seq_len))
+    return {"params": params,
+            "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "state": state}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             coded: bool = False) -> dict:
+    cfg, shape, _ = input_specs(arch, shape_name, coded=coded)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skip:full-attention"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    from repro.models.hints import set_mesh
+    set_mesh(mesh)
+    t0 = time.time()
+    with mesh:
+        specs = _specs_for(cfg, shape)
+        fn, args = build_lowerable(cfg, shape, specs, mesh)
+        compiled = fn.lower(*args).compile()
+        mem = compiled.memory_analysis()
+        raw_cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    # trip-count-aware walk of the REAL program (XLA's cost_analysis counts
+    # scan/while bodies once — see analysis/hlo_walk.py)
+    walk = analyze_hlo(hlo)
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "coded": coded,
+        "chips": n_chips,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": walk.flops,
+            "bytes_accessed_per_device": walk.bytes,
+            "raw_flops_scan_body_once": raw_cost.get("flops", 0.0),
+            "analysis": "hlo_walk(trip-count aware, dot flops)",
+        },
+        "collectives": dict(walk.wire, ops=walk.n_collectives,
+                            total_wire_bytes=walk.total_wire),
+        "model_flops_per_token": 6 * cfg.active_param_count(),
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                        else 1),
+        "kind": shape.kind,
+    }
+    rec["roofline"] = roofline_terms(rec)
+    return rec
+
+
+def cell_path(arch, shape_name, mesh_kind, coded=False):
+    tag = "__coded" if coded else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--coded", action="store_true",
+                    help="enable the SAC-coded MLP contraction variant")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s) for a, s, status in cells(include_skips=True)]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape_name in todo:
+        for mk in meshes:
+            path = cell_path(arch, shape_name, mk, args.coded)
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip-existing] {arch} {shape_name} {mk}")
+                continue
+            print(f"=== {arch} × {shape_name} × {mk} ===", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, mk, coded=args.coded)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape_name, "mesh": mk,
+                       "status": f"error: {type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures += 1
+                print(f"  FAILED: {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            jax.clear_caches()          # keep 1-process RSS bounded
+            if rec.get("status") == "ok":
+                m = rec["memory"]["peak_bytes_per_device"] / 2 ** 30
+                fl = rec["cost"]["flops_per_device"]
+                print(f"  ok: peak {m:.2f} GiB/dev, {fl:.3g} flops/dev, "
+                      f"{rec['compile_s']}s compile", flush=True)
+            elif rec.get("status", "").startswith("skip"):
+                print(f"  {rec['status']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

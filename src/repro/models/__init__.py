@@ -1,0 +1,15 @@
+"""Model zoo: one generic decoder-only LM covering all assigned families."""
+from .attention import KVCache, blockwise_attention, decode_attention
+from .blocks import block_decode_step, block_forward, init_layer_params
+from .layers import cross_entropy_chunked, rms_norm, rope
+from .lm import (DecodeState, abstract_params, compute_logits, decode_step,
+                 embed_tokens, forward_hidden, init_decode_state, init_params,
+                 lm_loss, prefill)
+
+__all__ = [
+    "KVCache", "blockwise_attention", "decode_attention", "block_forward",
+    "block_decode_step", "init_layer_params", "rms_norm", "rope",
+    "cross_entropy_chunked", "DecodeState", "abstract_params",
+    "compute_logits", "decode_step", "embed_tokens", "forward_hidden",
+    "init_decode_state", "init_params", "lm_loss", "prefill",
+]

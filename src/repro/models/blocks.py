@@ -1,0 +1,211 @@
+"""Decoder blocks: attention / SSM / MoE / hybrid mixers + per-layer params.
+
+A block is ``x + mixer(norm(x))`` then ``x + ffn(norm(x))``.  The mixer is
+chosen by the arch family: GQA attention (dense/moe/vlm/audio), Mamba (ssm),
+or both in parallel (hybrid — hymba's parallel attn+mamba heads).  All
+functions take ONE layer's parameter slice; stacking/scanning over layers
+happens in lm.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import blockwise_attention, decode_attention
+from .layers import gated_mlp, init_dense, init_norm, rms_norm, rope
+from .moe import init_moe_params, moe_block
+from .ssm import init_mamba_params, mamba_block, mamba_step
+
+__all__ = ["init_layer_params", "block_forward", "block_decode_step"]
+
+
+# --------------------------------------------------------------------- init
+
+def init_layer_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: dict = {"mixer_norm": init_norm(d, dtype)}
+    if cfg.has_attention:
+        hd, H, Hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        attn = {
+            "wq": init_dense(ks[0], d, H * hd, dtype),
+            "wk": init_dense(ks[1], d, Hkv * hd, dtype),
+            "wv": init_dense(ks[2], d, Hkv * hd, dtype),
+            "wo": init_dense(ks[3], H * hd, d, dtype),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = jnp.zeros((H * hd,), dtype)
+            attn["bk"] = jnp.zeros((Hkv * hd,), dtype)
+            attn["bv"] = jnp.zeros((Hkv * hd,), dtype)
+        p["attn"] = attn
+    if cfg.has_ssm:
+        p["ssm"] = init_mamba_params(ks[4], cfg, dtype)
+    p["ffn_norm"] = init_norm(d, dtype)
+    if cfg.has_moe:
+        p["moe"] = init_moe_params(ks[5], cfg, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = {"w_up": init_dense(ks[6], d, cfg.d_ff, dtype),
+                    "w_down": init_dense(ks[7], cfg.d_ff, d, dtype)}
+        if cfg.mlp_act != "gelu":
+            p["mlp"]["w_gate"] = init_dense(ks[5], d, cfg.d_ff, dtype)
+    return p
+
+
+# ------------------------------------------------------------ shared pieces
+
+def _qkv(p, x, cfg, positions):
+    B, L, d = x.shape
+    hd, H, Hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)
+    q = q.reshape(B, L, H, hd)
+    k = k.reshape(B, L, Hkv, hd)
+    v = v.reshape(B, L, Hkv, hd)
+    if cfg.pos_embed == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # (B, heads, L, hd)
+    return (jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+            jnp.moveaxis(v, 1, 2))
+
+
+def _attn_forward(p, x, cfg, positions, window, q_offset=0):
+    """Full-sequence attention sublayer.  Returns (out, (k, v)) for caching."""
+    B, L, d = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cfg.cost_mode:
+        # materialized attention (identical dot FLOPs, no inner scans) so the
+        # dry-run cost extraction sees every operation exactly once; batch
+        # hints mirror the real blockwise path's sharding.
+        from ..kernels.flash_attention.ref import attention_ref
+        from .hints import axes_hint, get_model_info
+        win = int(window) if not hasattr(window, "aval") else None
+        # mirror the real path: batch on data, heads (when divisible) or
+        # query length on the model axis
+        _, msize = get_model_info()
+        mdim = 1 if (msize > 1 and cfg.n_heads % msize == 0) else 2
+        q = axes_hint(q, 0, mdim)
+        k, v = axes_hint(k, 0, None), axes_hint(v, 0, None)
+        out = axes_hint(attention_ref(q, k, v, causal=True,
+                                      window=(win or None),
+                                      q_offset=q_offset), 0, mdim)
+    else:
+        out = blockwise_attention(q, k, v, causal=True, window=window,
+                                  q_offset=q_offset)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, L, -1)
+    return out @ p["wo"], (k, v)
+
+
+def _ffn(p, x, cfg, coded_weights=None):
+    """Returns (out, moe_aux_loss)."""
+    if cfg.has_moe:
+        B, L, d = x.shape
+        out, aux = moe_block(p["moe"], x.reshape(B * L, d), cfg)
+        return out.reshape(B, L, d), aux
+    if cfg.d_ff:
+        zero = jnp.zeros((), jnp.float32)
+        if cfg.coded and coded_weights is not None:
+            # SAC-coded down-projection: straggler-tolerant TP contraction
+            from ..core import MatDotCode, chebyshev_roots
+            from ..runtime.coded import coded_contraction, coded_generators
+            B, L, d = x.shape
+            N = coded_weights.shape[0]
+            # Chebyshev-point MatDot: best real-valued conditioning (complex
+            # points would cost 4× on the MXU — DESIGN.md §3 numerics note)
+            code = MatDotCode(cfg.coded_K, N, chebyshev_roots(N))
+            G_A, G_B = coded_generators(code)
+            mp = p["mlp"]
+            if cfg.mlp_act == "gelu":
+                h = jax.nn.gelu(x @ mp["w_up"], approximate=True)
+            elif cfg.mlp_act == "geglu":
+                h = jax.nn.gelu(x @ mp["w_gate"], approximate=True) * (x @ mp["w_up"])
+            else:
+                h = jax.nn.silu(x @ mp["w_gate"]) * (x @ mp["w_up"])
+            out = coded_contraction(h.reshape(B * L, -1), mp["w_down"],
+                                    G_A, G_B, coded_weights)
+            return out.reshape(B, L, d), zero
+        return gated_mlp(x, p["mlp"], cfg.mlp_act), zero
+    return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ forward
+
+def block_forward(p: dict, x: jax.Array, cfg, positions, window,
+                  use_pallas: bool = False, return_state: bool = False,
+                  coded_weights=None):
+    """One decoder block over a full sequence.
+
+    ``window``: 0/array-0 → full attention; >0 → sliding window.  May be a
+    traced per-layer scalar (hybrid archs scan over it).
+    Returns ``(x', kv or None, ssm_state or None, moe_aux)`` — kv = (k, v)
+    for caching; ssm_state = (conv_tail, h_final) when ``return_state``.
+    """
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    kv = ssm_state = None
+
+    def run_ssm(h):
+        if return_state:
+            return mamba_block(p["ssm"], h, cfg, return_state=True)
+        return mamba_block(p["ssm"], h, cfg, use_pallas=use_pallas), None
+
+    if cfg.family == "hybrid":
+        attn_out, kv = _attn_forward(p["attn"], h, cfg, positions, window)
+        ssm_out, ssm_state = run_ssm(h)
+        x = x + 0.5 * (attn_out + ssm_out)       # parallel heads, mean-fused
+    elif cfg.has_ssm:
+        ssm_out, ssm_state = run_ssm(h)
+        x = x + ssm_out
+    else:
+        attn_out, kv = _attn_forward(p["attn"], h, cfg, positions, window)
+        x = x + attn_out
+    ffn_out, aux = _ffn(p, rms_norm(x, p["ffn_norm"], cfg.norm_eps), cfg,
+                        coded_weights)
+    x = x + ffn_out
+    return x, kv, ssm_state, aux
+
+
+# ------------------------------------------------------------------- decode
+
+def block_decode_step(p: dict, x: jax.Array, cfg, pos, window,
+                      kv_cache=None, ssm_state=None, cache_pos=None,
+                      ring: bool = False):
+    """One decoder block for one token.  x (B, 1, d).
+
+    ``kv_cache``: (k (B,Hkv,S,hd), v) — written at ``cache_pos`` (defaults
+    to ``pos``; differs for ring-buffer window caches).
+    ``ssm_state``: (conv (B,c-1,di), h (B,di,s)).
+    Returns (x', kv_cache', ssm_state').
+    """
+    B = x.shape[0]
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    cpos = pos if cache_pos is None else cache_pos
+
+    def attend(h):
+        q, k, v = _qkv(p["attn"], h, cfg,
+                       jnp.full((B, 1), pos, jnp.int32))
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cpos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cpos, axis=2)
+        out = decode_attention(q, kc, vc, pos, window=window, ring=ring)
+        out = jnp.moveaxis(out, 1, 2).reshape(B, 1, -1)
+        return out @ p["attn"]["wo"], (kc, vc)
+
+    new_kv, new_ssm = kv_cache, ssm_state
+    if cfg.family == "hybrid":
+        attn_out, new_kv = attend(h)
+        y, conv, hh = mamba_step(p["ssm"], h[:, 0], ssm_state[0],
+                                 ssm_state[1], cfg)
+        x = x + 0.5 * (attn_out + y[:, None])
+        new_ssm = (conv, hh)
+    elif cfg.has_ssm:
+        y, conv, hh = mamba_step(p["ssm"], h[:, 0], ssm_state[0],
+                                 ssm_state[1], cfg)
+        x = x + y[:, None]
+        new_ssm = (conv, hh)
+    else:
+        attn_out, new_kv = attend(h)
+        x = x + attn_out
+    ffn_out, _ = _ffn(p, rms_norm(x, p["ffn_norm"], cfg.norm_eps), cfg)
+    x = x + ffn_out
+    return x, new_kv, new_ssm

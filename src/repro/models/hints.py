@@ -1,0 +1,97 @@
+"""Sharding hints: anchor GSPMD propagation through scans and maps.
+
+GSPMD loses the batch sharding of attention/loss intermediates inside nested
+``lax.scan``/``lax.map`` bodies (measured: 17 GiB/device attention residuals
+on the 16×16 mesh — see EXPERIMENTS.md §Perf iteration log).  These helpers
+pin the batch dim to the mesh's data axes wherever intermediates are born.
+No-ops outside a mesh context (single-device tests).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple = ("data",)
+_BATCH_SIZE: int = 1          # product of the batch axes' sizes
+_MODEL_AXIS: str = "model"
+_MODEL_SIZE: int = 1
+_MESH = None                  # active Mesh (set by launch/train drivers)
+
+__all__ = ["set_batch_axes", "get_batch_axes", "hint", "batch_hint",
+           "axes_hint", "set_mesh", "get_mesh"]
+
+
+def set_batch_axes(axes, size: int = 1, model_axis: str = "model",
+                   model_size: int = 1) -> None:
+    """Configure the mesh axes carrying the batch + their total size."""
+    global _BATCH_AXES, _BATCH_SIZE, _MODEL_AXIS, _MODEL_SIZE
+    _BATCH_AXES = tuple(axes)
+    _BATCH_SIZE = int(size)
+    _MODEL_AXIS = model_axis
+    _MODEL_SIZE = int(model_size)
+
+
+def set_mesh(mesh) -> None:
+    """Register the active mesh (enables shard_map code paths, e.g. MoE)."""
+    global _MESH
+    _MESH = mesh
+    if mesh is not None:
+        baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bsize = 1
+        for a in baxes:
+            bsize *= int(mesh.shape[a])
+        msize = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+        set_batch_axes(baxes, bsize, "model", msize)
+
+
+def get_mesh():
+    return _MESH
+
+
+def get_batch_axes() -> tuple:
+    return _BATCH_AXES
+
+
+def get_model_info() -> tuple:
+    return _MODEL_AXIS, _MODEL_SIZE
+
+
+def hint(x, spec: P):
+    """Best-effort with_sharding_constraint (skipped without a mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def batch_hint(x, dim: int = 0):
+    """Pin ``dim`` of x to the batch axes, leave the rest to the partitioner.
+
+    Skipped when the dim doesn't divide the axes' total size (e.g. batch-1
+    long-context decode — there the model axes carry the work instead).
+    """
+    if x.shape[dim] % max(_BATCH_SIZE, 1) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    return hint(x, P(*spec))
+
+
+def axes_hint(x, batch_dim: int | None = 0, model_dim: int | None = None):
+    """Pin batch_dim to the data axes AND model_dim to the model axis.
+
+    Either pin is dropped independently if its dim size doesn't divide the
+    axis — GSPMD otherwise replicates big activations over the model axis
+    (measured 16× FLOP inflation on the MLP — EXPERIMENTS.md §Perf).
+    """
+    spec = [None] * x.ndim
+    if batch_dim is not None and _BATCH_SIZE > 1 \
+            and x.shape[batch_dim] % _BATCH_SIZE == 0:
+        spec[batch_dim] = (_BATCH_AXES if len(_BATCH_AXES) > 1
+                           else _BATCH_AXES[0])
+    if model_dim is not None and _MODEL_SIZE > 1 \
+            and x.shape[model_dim] % _MODEL_SIZE == 0:
+        spec[model_dim] = _MODEL_AXIS
+    if all(s is None for s in spec):
+        return x
+    return hint(x, P(*spec))

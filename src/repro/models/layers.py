@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, rotary/sinusoidal positions, gated MLPs.
+
+Everything is a pure function over explicit parameter pytrees (plain dicts of
+jnp arrays) — no module framework — so the same code paths trace for real
+compute (smoke tests), abstract lowering (dry-run) and grad (train).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "sinusoidal_positions", "gated_mlp",
+           "init_dense", "init_norm", "cross_entropy_chunked"]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding.  x (..., L, H, hd); positions (..., L)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,L,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Classic transformer sinusoidal embedding (musicgen)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def gated_mlp(x: jax.Array, p: dict, act: str = "swiglu") -> jax.Array:
+    """SwiGLU / GeGLU gated MLP — or plain GELU FFN (act="gelu", no gate).
+
+    The hidden activation is pinned to (batch, ..., model) so the ff dim
+    computes tensor-parallel instead of model-axis-replicated.
+    """
+    from .hints import axes_hint
+    if act == "gelu":                      # classic transformer FFN (musicgen)
+        h = axes_hint(jax.nn.gelu(x @ p["w_up"], approximate=True),
+                      0, x.ndim - 1)
+        return h @ p["w_down"]
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    h = axes_hint(h, 0, x.ndim - 1)
+    return h @ p["w_down"]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def cross_entropy_chunked(logits_fn, hidden: jax.Array, targets: jax.Array,
+                          mask: jax.Array | None = None,
+                          chunk: int = 4096,
+                          static_unroll: bool = False) -> jax.Array:
+    """Memory-bounded CE: project→softmax over token chunks via lax.map.
+
+    ``logits_fn(h_chunk) -> (T_c, V)``; ``hidden (T, d)``; ``targets (T,)``.
+    Avoids materializing the full (T, V) logits (v5e HBM at 150k vocab).
+    Each chunk is rematerialized under AD — without this the map stacks every
+    chunk's f32 logits as residuals (measured 67 GiB/device on gemma-2b
+    train_4k — EXPERIMENTS.md §Perf) — and chunk rows are pinned to the
+    batch (data) axes.
+    """
+    from .hints import batch_hint
+
+    T = hidden.shape[0]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, pad),))
+        mask = jnp.pad(mask, ((0, pad),)) if mask is not None else \
+            jnp.pad(jnp.ones((T,), jnp.float32), ((0, pad),))
+    elif mask is None:
+        mask = jnp.ones((T,), jnp.float32)
+    n = hidden.shape[0] // chunk
+
+    from .hints import axes_hint
+
+    @jax.checkpoint
+    def one(args):
+        h, t, m = args
+        # pin (tokens → data, vocab → model) — GSPMD otherwise drops the
+        # token sharding for large chunks (measured 11× CE FLOPs, §Perf it-7)
+        lg = axes_hint(logits_fn(batch_hint(h)).astype(jnp.float32), 0, 1)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, t[:, None], axis=-1)[:, 0]
+        return ((lse - ll) * m).sum(), m.sum()
+
+    hs = batch_hint(hidden.reshape(n, chunk, -1), dim=1)
+    ts = targets.reshape(n, chunk)
+    ms = mask.reshape(n, chunk)
+    if static_unroll:
+        pairs = [one((hs[i], ts[i], ms[i])) for i in range(n)]
+        losses = jnp.stack([p[0] for p in pairs])
+        counts = jnp.stack([p[1] for p in pairs])
+    else:
+        losses, counts = jax.lax.map(one, (hs, ts, ms))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)

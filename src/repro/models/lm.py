@@ -1,0 +1,353 @@
+"""Generic decoder-only LM assembled from an ArchConfig.
+
+Covers every assigned family with one code path:
+
+* dense / moe — GQA attention + (gated MLP | MoE) blocks
+* ssm — Mamba-1 blocks (attention-free)
+* hybrid — parallel attention+Mamba heads per block (hymba)
+* vlm — backbone LM consuming [vision embeds ; token embeds] (frontend stub)
+* audio — n_codebooks parallel token streams, summed embeddings, one LM head
+  per codebook (musicgen over EnCodec tokens; delay pattern is a frontend
+  concern)
+
+Layer parameters are STACKED on a leading L axis and iterated with
+``lax.scan`` (+ optional per-layer remat) so the HLO stays O(1) in depth —
+essential for compiling 64-layer configs on the 512-device dry-run mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_decode_step, block_forward, init_layer_params
+from .hints import batch_hint
+from .layers import cross_entropy_chunked, init_dense, init_norm, rms_norm, \
+    sinusoidal_positions
+
+__all__ = ["init_params", "abstract_params", "layer_windows", "forward_hidden",
+           "compute_logits", "lm_loss", "init_decode_state", "prefill",
+           "decode_step", "DecodeState"]
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(key, cfg, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Vp, d = cfg.padded_vocab(), cfg.d_model
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    n_emb = max(cfg.n_codebooks, 1)
+    scale = d ** -0.5
+    if cfg.n_codebooks:
+        embed = (scale * jax.random.normal(k_emb, (n_emb, Vp, d))).astype(dtype)
+    else:
+        embed = (scale * jax.random.normal(k_emb, (Vp, d))).astype(dtype)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.use_scan:
+        layers = jax.vmap(lambda k: init_layer_params(k, cfg, dtype))(layer_keys)
+    else:
+        layers = [init_layer_params(k, cfg, dtype) for k in layer_keys]
+    params = {"embed": embed, "layers": layers,
+              "final_norm": init_norm(d, dtype)}
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks:
+            params["lm_head"] = (scale * jax.random.normal(
+                k_head, (cfg.n_codebooks, d, Vp))).astype(dtype)
+        else:
+            params["lm_head"] = init_dense(k_head, d, Vp, dtype)
+    return params
+
+
+def abstract_params(cfg, dtype=None):
+    """ShapeDtypeStruct pytree — dry-run initialization (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg, dtype))
+
+
+def layer_windows(cfg):
+    """Per-layer sliding-window sizes (0 = full attention).
+
+    Host-side numpy (pure config): scanned paths wrap it in jnp; unrolled
+    paths index it as python ints.
+    """
+    import numpy as np
+    if not cfg.has_attention:
+        return np.zeros((cfg.n_layers,), np.int32)
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.sliding_window and cfg.global_attn_layers:
+        for i in cfg.global_attn_layers:
+            if i < cfg.n_layers:
+                w[i] = 0
+    return w
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_tokens(params, tokens, cfg):
+    """tokens (B, L) int32 — or (B, L, n_cb) for audio — → (B, L, d)."""
+    if cfg.n_codebooks:
+        parts = [params["embed"][c][tokens[..., c]]
+                 for c in range(cfg.n_codebooks)]
+        x = sum(parts)
+    else:
+        x = params["embed"][tokens]
+    if cfg.pos_embed == "sinusoidal":
+        B, L = tokens.shape[:2]
+        pos = jnp.arange(L)[None, :]
+        x = x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    return x
+
+
+# ------------------------------------------------------------------ forward
+
+def forward_hidden(params, x, cfg, positions, *, use_pallas: bool = False,
+                   coded_weights=None):
+    """Run all decoder blocks.  x (B, L, d) → ((B, L, d), moe_aux_loss)."""
+    windows = layer_windows(cfg)
+
+    def body(h, layer_in):
+        p_l, win = layer_in
+        h = batch_hint(h)        # re-anchor batch sharding across the scan
+        h, _, _, aux = block_forward(p_l, h, cfg, positions, win,
+                                     use_pallas=use_pallas,
+                                     coded_weights=coded_weights)
+        return h, aux
+
+    total_aux = jnp.zeros((), jnp.float32)
+    if cfg.use_scan:
+        step = jax.checkpoint(body) if cfg.remat else body
+        x, auxes = jax.lax.scan(step, x, (params["layers"], windows))
+        total_aux = auxes.mean()
+    else:
+        layers = params["layers"]
+        for i in range(cfg.n_layers):
+            # stacked params (scan layout) slice per layer; list layout direct
+            p_l = layers[i] if isinstance(layers, list) else \
+                jax.tree.map(lambda a: a[i], layers)
+            x = batch_hint(x)
+            x, _, _, aux = block_forward(p_l, x, cfg, positions,
+                                         int(windows[i]),
+                                         use_pallas=use_pallas,
+                                         coded_weights=coded_weights)
+            total_aux = total_aux + aux / cfg.n_layers
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), total_aux
+
+
+def compute_logits(params, hidden, cfg, codebook: int | None = None):
+    """hidden (..., d) → logits over the (padded) vocab."""
+    if cfg.tie_embeddings:
+        table = params["embed"] if not cfg.n_codebooks else params["embed"][codebook]
+        return hidden @ table.T
+    head = params["lm_head"] if not cfg.n_codebooks else params["lm_head"][codebook]
+    return hidden @ head
+
+
+def gathered_logits_fn(params, cfg, codebook: int | None = None):
+    """Like compute_logits but with the head's FSDP d-shard gathered ONCE.
+
+    With the table d-dim sharded over data (ZeRO), every CE chunk's logits
+    matmul psums over data — 537 MB × n_chunks per step (measured ~134 GB on
+    gemma, §Perf it-6).  Re-sharding the table to P(model, None) up front
+    costs one small all-gather; AD reduces the accumulated grad back with a
+    single reduce-scatter.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .hints import hint
+    if cfg.tie_embeddings:
+        table = params["embed"] if not cfg.n_codebooks \
+            else params["embed"][codebook]
+        table = hint(table, P("model", None))
+        return lambda h: h @ table.T
+    head = params["lm_head"] if not cfg.n_codebooks \
+        else params["lm_head"][codebook]
+    head = hint(head, P(None, "model"))
+    return lambda h: h @ head
+
+
+def lm_loss(params, batch, cfg, *, use_pallas: bool = False):
+    """Next-token CE loss.  batch: {tokens, (vision_embeds)} per family."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    n_vis = 0
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(x.dtype)     # (B, n_vis, d)
+        n_vis = vis.shape[1]
+        x = jnp.concatenate([vis, x], axis=1)
+    L = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    h, moe_aux = forward_hidden(params, x, cfg, positions,
+                                use_pallas=use_pallas,
+                                coded_weights=batch.get("coded_weights"))
+    h = h[:, n_vis:]                                      # text positions only
+    # shift: predict token t+1 from position t
+    h = h[:, :-1]
+    T = h.shape[0] * h.shape[1]
+    hidden = h.reshape(T, cfg.d_model)
+    aux_term = 0.01 * moe_aux if cfg.has_moe else 0.0
+    chunk = cfg.loss_chunk
+    if cfg.cost_mode:                    # bound the python unroll to 16 chunks
+        chunk = max(chunk, -(-T // 16))
+    else:
+        # bound the scanned CE to <=32 chunks: each chunk's table-grad psums
+        # over the data axis (131 MB/chunk on gemma), so fewer+bigger chunks
+        # cut the per-step CE wire 8x (§Perf it-7)
+        chunk = max(chunk, -(-T // 32))
+    # chunk rows must stay shardable over the data axes (it-8: a 32760-row
+    # chunk silently lost its row sharding → 11× CE FLOPs)
+    chunk = ((chunk + 511) // 512) * 512
+    if cfg.n_codebooks:
+        losses = []
+        for c in range(cfg.n_codebooks):
+            tgt = tokens[:, 1:, c].reshape(T)
+            losses.append(cross_entropy_chunked(
+                gathered_logits_fn(params, cfg, c),
+                hidden, tgt, chunk=chunk, static_unroll=cfg.cost_mode))
+        return sum(losses) / cfg.n_codebooks + aux_term
+    tgt = tokens[:, 1:].reshape(T)
+    return cross_entropy_chunked(gathered_logits_fn(params, cfg),
+                                 hidden, tgt, chunk=chunk,
+                                 static_unroll=cfg.cost_mode) + aux_term
+
+
+# ------------------------------------------------------------------- decode
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer decode state + current position."""
+    kv_k: Any            # (L, B, Hkv, S, hd) or () for attention-free
+    kv_v: Any
+    conv: Any            # (L, B, c-1, di) or ()
+    ssm_h: Any           # (L, B, di, s) or ()
+    pos: jax.Array       # () int32
+
+
+def init_decode_state(cfg, batch: int, max_seq: int, dtype=None) -> DecodeState:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    kv_k = kv_v = conv = ssm_h = ()
+    if cfg.has_attention:
+        hd, Hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        # sliding-window-only archs need only window-sized caches
+        S = max_seq
+        if cfg.sliding_window and not cfg.global_attn_layers:
+            S = min(max_seq, cfg.sliding_window)
+        kv_k = jnp.zeros((L, batch, Hkv, S, hd), dtype)
+        kv_v = jnp.zeros((L, batch, Hkv, S, hd), dtype)
+    if cfg.has_ssm:
+        di = cfg.resolved_d_inner
+        conv = jnp.zeros((L, batch, cfg.ssm_conv - 1, di), dtype)
+        ssm_h = jnp.zeros((L, batch, di, cfg.ssm_state), jnp.float32)
+    return DecodeState(kv_k, kv_v, conv, ssm_h, jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, tokens, state: DecodeState, cfg):
+    """One new token with existing state.  tokens (B, 1) [or (B, 1, n_cb)].
+
+    Returns (logits (B, 1, V) [or (B, 1, n_cb, V)], new state).
+    NOTE: for window-limited caches the write position wraps (ring buffer);
+    masking in decode_attention uses absolute positions so correctness holds
+    as long as S >= window.
+    """
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.pos_embed == "sinusoidal":
+        # embed_tokens added position 0; replace with the true position
+        x = x - sinusoidal_positions(jnp.zeros((1, 1), jnp.int32),
+                                     cfg.d_model).astype(x.dtype)
+        x = x + sinusoidal_positions(state.pos[None, None],
+                                     cfg.d_model).astype(x.dtype)
+    windows = layer_windows(cfg)
+    pos = state.pos
+    has_kv = cfg.has_attention
+    has_ssm = cfg.has_ssm
+    cache_pos = pos
+    ring = bool(has_kv and cfg.sliding_window and not cfg.global_attn_layers
+                and state.kv_k.shape[3] < 10 ** 9)
+    if ring:
+        ring = state.kv_k.shape[3] <= cfg.sliding_window
+    if ring:
+        cache_pos = jnp.mod(pos, state.kv_k.shape[3])      # ring buffer
+
+    def body(h, layer_in):
+        p_l, win, kv_k, kv_v, conv, ssm_h = layer_in
+        kv = (kv_k, kv_v) if has_kv else None
+        ssm = (conv, ssm_h) if has_ssm else None
+        h, kv, ssm = block_decode_step(p_l, h, cfg, pos, win,
+                                       kv_cache=kv, ssm_state=ssm,
+                                       cache_pos=cache_pos, ring=ring)
+        out = (kv[0] if has_kv else (), kv[1] if has_kv else (),
+               ssm[0] if has_ssm else (), ssm[1] if has_ssm else ())
+        return h, out
+
+    xs = (params["layers"], windows, state.kv_k, state.kv_v, state.conv,
+          state.ssm_h)
+    if cfg.use_scan:
+        x, outs = jax.lax.scan(body, x, xs)
+    else:
+        raise NotImplementedError("decode requires use_scan=True")
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks:
+        logits = jnp.stack([compute_logits(params, h, cfg, c)
+                            for c in range(cfg.n_codebooks)], axis=2)
+    else:
+        logits = compute_logits(params, h, cfg)
+    new_state = DecodeState(outs[0] if has_kv else (),
+                            outs[1] if has_kv else (),
+                            outs[2] if has_ssm else (),
+                            outs[3] if has_ssm else (),
+                            pos + 1)
+    return logits, new_state
+
+
+def prefill(params, tokens, cfg, max_seq: int | None = None, *,
+            use_pallas: bool = False):
+    """Process a full prompt, build the decode state, return last logits.
+
+    For simplicity the KV cache is built at ``max_seq`` (≥ prompt length);
+    SSM state is produced by scanning the recurrence (kernel path).
+    """
+    B, L = tokens.shape[:2]
+    S = max_seq or L
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    windows = layer_windows(cfg)
+    state = init_decode_state(cfg, B, S, dtype=x.dtype)
+    has_kv = cfg.has_attention
+    has_ssm = cfg.has_ssm
+
+    def body(h, layer_in):
+        p_l, win = layer_in
+        h, kv, ssm, _ = block_forward(p_l, h, cfg, positions, win,
+                                      use_pallas=use_pallas,
+                                      return_state=has_ssm)
+        out_kv = ((), ())
+        if has_kv:
+            k, v = kv                                       # (B, Hkv, L, hd)
+            Scap = state.kv_k.shape[3]
+            if Scap >= L:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, Scap - L), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, Scap - L), (0, 0)))
+            else:                 # ring cache: slot = absolute pos mod Scap
+                k = jnp.roll(k[:, :, -Scap:], L % Scap, axis=2)
+                v = jnp.roll(v[:, :, -Scap:], L % Scap, axis=2)
+            out_kv = (k, v)
+        out_ssm = ssm if has_ssm else ((), ())
+        return h, (out_kv, out_ssm)
+
+    if not cfg.use_scan:
+        raise NotImplementedError("prefill requires use_scan=True")
+    x, ((ks, vs), (convs, hs)) = jax.lax.scan(
+        body, x, (params["layers"], windows))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = h[:, -1:]
+    if cfg.n_codebooks:
+        logits = jnp.stack([compute_logits(params, last, cfg, c)
+                            for c in range(cfg.n_codebooks)], axis=2)
+    else:
+        logits = compute_logits(params, last, cfg)
+    state = DecodeState(ks if has_kv else (), vs if has_kv else (),
+                        convs.astype(x.dtype) if has_ssm else (),
+                        hs if has_ssm else (),
+                        jnp.asarray(L, jnp.int32))
+    return logits, state

@@ -1,0 +1,111 @@
+"""Mamba-1 block (falcon-mamba; also the SSM half of hymba).
+
+Block: in_proj → [x, z]; causal depthwise conv on x; data-dependent Δ, B, C
+from x; diagonal selective scan (``repro.kernels.ssm_scan``); gate by SiLU(z);
+out_proj.  Decode keeps O(1) state per layer: the conv tail (last conv-1
+inputs) and the SSM state h — this is what makes long_500k run for the SSM
+archs while full-attention archs are skipped.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssm_scan.ops import ssm_scan, ssm_step_ref
+from .layers import init_dense
+
+__all__ = ["SSMState", "init_mamba_params", "mamba_block", "mamba_step"]
+
+
+class SSMState(NamedTuple):
+    """Per-layer-stacked decode state."""
+    conv: jax.Array      # (L, B, conv-1, d_inner) trailing inputs
+    h: jax.Array         # (L, B, d_inner, ssm_state)
+
+
+def init_mamba_params(key, cfg, dtype) -> dict:
+    d, di = cfg.d_model, cfg.resolved_d_inner
+    s, r, c = cfg.ssm_state, cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias for softplus ≈ [1e-3, 1e-1]
+    A = jnp.tile(jnp.arange(1, s + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (c, di)) / c).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_dense(ks[2], di, r + 2 * s, dtype),
+        "dt_proj": init_dense(ks[3], r, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),          # softplus⁻¹(0.01)
+        "A_log": jnp.log(A),                               # f32, (di, s)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[5], di, d, dtype),
+    }
+
+
+def _split_xproj(xp, r, s):
+    dt, B, C = jnp.split(xp, [r, r + s], axis=-1)
+    return dt, B, C
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x (B, L, di); w (c, di)."""
+    c = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (c - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(c))
+    return out + b[None, None]
+
+
+def mamba_block(p: dict, x: jax.Array, cfg, *, use_pallas: bool = False,
+                return_state: bool = False):
+    """Full-sequence mamba mixer.  x (B, L, d) → (B, L, d).
+
+    ``return_state=True`` also returns ``(conv_tail (B, c-1, di), h_final)``
+    for the serving prefill → decode hand-off.
+    """
+    from .hints import axes_hint
+    di, s, r = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    xz = axes_hint(x @ p["in_proj"], 0, 2)     # channels on the model axis
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(xin_raw, p["conv_w"], p["conv_b"]))
+    xin = axes_hint(xin, 0, 2)
+    dt_r, B, C = _split_xproj(xin @ p["x_proj"], r, s)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if return_state:
+        y, h_final = ssm_scan(xin, dt, A, B, C, p["D"], return_final=True)
+    else:
+        y = ssm_scan(xin, dt, A, B, C, p["D"], use_pallas=use_pallas)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        c = cfg.ssm_conv
+        pad = jnp.pad(xin_raw, ((0, 0), (c - 1, 0), (0, 0)))
+        conv_tail = pad[:, pad.shape[1] - (c - 1):, :]
+        return out, (conv_tail, h_final)
+    return out
+
+
+def mamba_step(p: dict, x_t: jax.Array, conv_state: jax.Array,
+               h: jax.Array, cfg):
+    """One decode step.  x_t (B, d); conv_state (B, c-1, di); h (B, di, s).
+
+    Returns (y_t (B, d), conv_state', h').
+    """
+    di, s, r = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    c = cfg.ssm_conv
+    xz = x_t @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
+    window = jnp.concatenate([conv_state, xin[:, None]], axis=1)  # (B, c, di)
+    conv_out = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xin = jax.nn.silu(conv_out.astype(x_t.dtype))
+    dt_r, B, C = _split_xproj(xin @ p["x_proj"], r, s)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h, y = ssm_step_ref(h.astype(jnp.float32), xin.astype(jnp.float32),
+                        dt.astype(jnp.float32), A, B.astype(jnp.float32),
+                        C.astype(jnp.float32), p["D"])
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], window[:, 1:], h

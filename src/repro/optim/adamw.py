@@ -1,0 +1,90 @@
+"""AdamW + LR schedules (cosine, and WSD for minicpm-2b).
+
+Self-contained (no optax in this environment).  Moments can be stored in
+bfloat16 for trillion-parameter configs (kimi-k2) — the update math always
+runs in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "wsd_schedule", "clip_by_global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    """Returns (new_params, new_state).  ``lr`` may be a traced scalar."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        update = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            update = update + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = tree.flatten_up_to(grads)
+    flat_m = tree.flatten_up_to(state.m)
+    flat_v = tree.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def cosine_schedule(step, *, peak_lr, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(warmup, 1)
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor_frac: float = 0.01):
+    """MiniCPM's warmup-stable-decay: warmup → flat → sharp exp decay."""
+    t = step.astype(jnp.float32)
+    decay_steps = max(int(total * decay_frac), 1)
+    decay_start = total - decay_steps
+    warm = peak_lr * t / max(warmup, 1)
+    prog = jnp.clip((t - decay_start) / decay_steps, 0.0, 1.0)
+    decay = peak_lr * (floor_frac ** prog)
+    stable = jnp.asarray(peak_lr, jnp.float32)
+    out = jnp.where(t < warmup, warm, jnp.where(t < decay_start, stable, decay))
+    return out

@@ -1,0 +1,173 @@
+"""Sharding rules: DP / FSDP / TP / EP / sequence over the production mesh.
+
+Axis semantics (launch/mesh.py):
+* ``pod``   — pure data parallelism across pods (gradient all-reduce over DCN)
+* ``data``  — data parallelism within a pod; with ``cfg.fsdp`` weights are
+  additionally sharded over it (ZeRO-3: all-gather per layer inside the scan)
+* ``model`` — tensor/expert parallelism within a pod
+
+Rules are path-based over the parameter pytree and divisibility-checked: a
+dim is only sharded if the axis size divides it (GSPMD would pad otherwise —
+we prefer explicit, predictable layouts; the dry-run records what was chosen).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["batch_axes", "param_shardings", "batch_shardings",
+           "decode_state_shardings", "opt_state_shardings", "pick_spec"]
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def pick_spec(mesh: Mesh, shape, prefs) -> P:
+    """Build a PartitionSpec from ``prefs``: list of (dim, axis-or-tuple),
+    keeping only divisible assignments, first-come-first-served per dim/axis."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim, axes in prefs:
+        if axes is None or spec[dim] is not None:
+            continue
+        ax_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used or a not in mesh.axis_names for a in ax_t):
+            continue
+        if shape[dim] % _axsize(mesh, ax_t) != 0:
+            continue
+        spec[dim] = axes if isinstance(axes, str) else tuple(axes)
+        used.update(ax_t)
+    return P(*spec)
+
+
+def _leaf_spec(path: str, shape, cfg, mesh: Mesh) -> P:
+    """Sharding rule for one parameter leaf (path like 'layers/attn/wq')."""
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    parts = path.split("/")
+    name = parts[-1]
+    in_layers = parts[0] == "layers"
+    nd = len(shape)
+    # dims: with layer stacking the leading dim is L — never sharded.
+    off = 1 if in_layers else 0
+
+    if name == "embed" or (not in_layers and name == "lm_head"):
+        if name == "embed":
+            # (.., Vp, d): vocab → model, d → fsdp
+            return pick_spec(mesh, shape, [(nd - 2, "model"), (nd - 1, fsdp)])
+        # lm_head (.., d, Vp)
+        return pick_spec(mesh, shape, [(nd - 1, "model"), (nd - 2, fsdp)])
+    if name == "final_norm":
+        return P(*([None] * nd))
+    if not in_layers:
+        return P(*([None] * nd))
+
+    group = parts[1] if len(parts) > 1 else ""
+    if group == "attn":
+        if name in ("wq", "wk", "wv"):        # (L, d, Hx*hd)
+            return pick_spec(mesh, shape, [(off + 1, "model"), (off, fsdp)])
+        if name == "wo":                       # (L, H*hd, d)
+            return pick_spec(mesh, shape, [(off, "model"), (off + 1, fsdp)])
+        return pick_spec(mesh, shape, [(off, "model")])      # biases
+    if group == "mlp" or (group == "moe" and parts[2:3] == ["shared"]):
+        if name == "w_down":                   # (L, ff, d)
+            return pick_spec(mesh, shape, [(off, "model"), (off + 1, fsdp)])
+        return pick_spec(mesh, shape, [(off + 1, "model"), (off, fsdp)])
+    if group == "moe":
+        if name == "router":                   # (L, d, E)
+            return pick_spec(mesh, shape, [(off, fsdp)])
+        E = shape[off]
+        ep = E % mesh.shape["model"] == 0      # EP iff experts divide axis
+        if name == "w_down":                   # (L, E, f, d)
+            if ep:
+                return pick_spec(mesh, shape, [(off, "model"), (off + 2, fsdp)])
+            return pick_spec(mesh, shape, [(off + 1, "model"), (off + 2, fsdp)])
+        # w_gate / w_up                        # (L, E, d, f)
+        if ep:
+            return pick_spec(mesh, shape, [(off, "model"), (off + 1, fsdp)])
+        return pick_spec(mesh, shape, [(off + 2, "model"), (off + 1, fsdp)])
+    if group == "ssm":
+        if name in ("in_proj",):               # (L, d, 2di)
+            return pick_spec(mesh, shape, [(off + 1, "model"), (off, fsdp)])
+        if name in ("conv_w",):                # (L, c, di)
+            return pick_spec(mesh, shape, [(off + 1, "model")])
+        if name in ("conv_b", "dt_bias", "D"):  # (L, di)
+            return pick_spec(mesh, shape, [(off, "model")])
+        if name == "x_proj":                   # (L, di, r+2s)
+            return pick_spec(mesh, shape, [(off, "model")])
+        if name == "dt_proj":                  # (L, r, di)
+            return pick_spec(mesh, shape, [(off + 1, "model")])
+        if name == "A_log":                    # (L, di, s)
+            return pick_spec(mesh, shape, [(off, "model")])
+        if name == "out_proj":                 # (L, di, d)
+            return pick_spec(mesh, shape, [(off, "model"), (off + 1, fsdp)])
+    # norms and anything unmatched: replicated
+    return P(*([None] * nd))
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    return paths, [l for _, l in flat], treedef
+
+
+def param_shardings(cfg, mesh: Mesh, params_shape):
+    """NamedSharding pytree matching an (abstract) parameter tree."""
+    paths, leaves, treedef = _paths_and_leaves(params_shape)
+    shardings = [NamedSharding(mesh, _leaf_spec(p, l.shape, cfg, mesh))
+                 for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_shardings(cfg, mesh: Mesh, batch_spec):
+    """Batch dict: batch dim over (pod, data) when divisible."""
+    baxes = batch_axes(mesh)
+
+    def one(leaf):
+        spec = pick_spec(mesh, leaf.shape, [(0, baxes)])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_spec)
+
+
+def decode_state_shardings(cfg, mesh: Mesh, state_spec):
+    """DecodeState: batch over (pod,data); heads/channels over model.
+
+    KV cache (L, B, Hkv, S, hd): prefer Hkv over model (contiguous heads);
+    fall back to sequence sharding when Hkv doesn't divide the axis (MHA
+    models — the cache is the dominant decode footprint and MUST shard).
+    """
+    baxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        name = path[-1] if path else ""
+        if leaf.ndim == 5:         # kv cache
+            return NamedSharding(mesh, pick_spec(
+                mesh, leaf.shape, [(1, baxes), (2, "model"), (3, "model")]))
+        if leaf.ndim == 4:         # ssm h (L, B, di, s) or conv (L, B, c-1, di)
+            return NamedSharding(mesh, pick_spec(
+                mesh, leaf.shape, [(1, baxes), (2, "model"), (3, "model")]))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_spec)
+    out = [one([str(getattr(k, "key", getattr(k, "idx", k))) for k in p], l)
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(cfg, mesh: Mesh, params_shardings):
+    """AdamW moments inherit the parameter shardings; step is replicated."""
+    from ..optim.adamw import AdamWState
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      m=params_shardings, v=params_shardings)

@@ -1,0 +1,60 @@
+"""Jit-able train / prefill / decode steps (the units the dry-run lowers)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..optim.adamw import (adamw_update, clip_by_global_norm, cosine_schedule,
+                           wsd_schedule)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_schedule"]
+
+
+def make_schedule(cfg, *, peak_lr=3e-4, warmup=100, total=10_000):
+    """minicpm-2b trains with WSD (its paper's contribution); cosine else."""
+    fn = wsd_schedule if cfg.name.startswith("minicpm") else cosine_schedule
+    return functools.partial(fn, peak_lr=peak_lr, warmup=warmup, total=total)
+
+
+def make_train_step(cfg, schedule=None, *, max_grad_norm: float = 1.0,
+                    use_pallas: bool = False):
+    schedule = schedule or make_schedule(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.lm_loss(p, batch, cfg, use_pallas=use_pallas))(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step + 1)            # step 0 would sit at warmup lr=0
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int | None = None,
+                      use_pallas: bool = False):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            # backbone consumes [vision ; text]: prefill over text only here,
+            # vision embeds are folded by the serving frontend via lm_loss's
+            # concat path; for the serving shape we prefill the full stream.
+            pass
+        logits, state = lm.prefill(params, tokens, cfg, max_seq=max_seq,
+                                   use_pallas=use_pallas)
+        return logits, state
+
+    return prefill_step
+
+
+def make_decode_step(cfg, use_pallas: bool = False):
+    def serve_step(params, tokens, state):
+        return lm.decode_step(params, tokens, state, cfg)
+
+    return serve_step

@@ -1,0 +1,160 @@
+"""Exact-recovery + threshold behaviour for every CDC scheme (Table I)."""
+import numpy as np
+import pytest
+
+from repro.core import (EpsApproxMatDotCode, GroupSACCode, LagrangeCode,
+                        LayerSACCode, MatDotCode, OrthoMatDotCode, make_code,
+                        x_complex, x_equal)
+
+RNG = np.random.default_rng(1234)
+
+
+def _problem(Nx=24, Nz=64, Ny=10):
+    A = RNG.standard_normal((Nx, Nz))
+    B = RNG.standard_normal((Nz, Ny))
+    return A, B, A @ B
+
+
+def _rel(est, C):
+    return float(np.linalg.norm(est - C) ** 2 / np.linalg.norm(C) ** 2)
+
+
+K, N = 8, 24
+
+
+def all_codes():
+    """(code, exact-recovery tolerance on squared relative error).
+
+    Tolerances reflect the conditioning story of §V-A: complex equal-magnitude
+    points and Chebyshev points are well conditioned; real equispaced monomial
+    Vandermonde (X_equal) is exponentially ill conditioned — recovery is
+    "exact" only up to a large numerical-error floor, exactly as the paper's
+    red X_equal curves show.  The clustered L-SAC points also pay a
+    conditioning price at the exact-recovery layer (§IV-A).
+    """
+    return [
+        (MatDotCode(K, N, x_complex(N, 0.1)), 1e-10),
+        (MatDotCode(K, N, x_equal(N, 0.45)), 1e-2),
+        (EpsApproxMatDotCode(K, N, x_complex(N, 0.1)), 1e-10),
+        (OrthoMatDotCode(K, N), 1e-12),
+        (LagrangeCode(K, N), 1e-12),
+        (GroupSACCode(K, N, x_complex(N, 0.1), [5, 3], rng=RNG), 1e-4),
+        (GroupSACCode(K, N, x_complex(N, 0.1), [8], rng=RNG), 1e-4),
+        # deep key degrees (x^17) at |x|=0.15 amplify solve noise by ε^-17 —
+        # inherent to small-ε monomial codes (the paper's computation error)
+        (GroupSACCode(K, N, x_complex(N, 0.15), [2, 4, 2], rng=RNG), 5e-2),
+        # at |x|→1 the amplification vanishes and recovery is exact
+        (GroupSACCode(K, N, x_complex(N, 0.9), [2, 4, 2], rng=RNG), 1e-12),
+        (LayerSACCode(K, N, base="ortho", eps=6.25e-3), 1e-8),
+        (LayerSACCode(K, N, base="lagrange", eps=3.33e-2), 1e-12),
+    ]
+
+
+CODE_IDS = [f"{c.name}-x{i}" for i, (c, _) in enumerate(all_codes())]
+
+
+@pytest.mark.parametrize("code,tol", all_codes(), ids=CODE_IDS)
+def test_exact_recovery(code, tol):
+    A, B, C = _problem()
+    P = code.run_workers(A, B)
+    for trial in range(3):
+        order = np.random.default_rng(trial).permutation(code.N)
+        est = code.decode(P, order, code.recovery_threshold)
+        assert est is not None
+        assert _rel(est, C) < tol, f"{code.name}: {_rel(est, C)}"
+
+
+@pytest.mark.parametrize("code,tol", all_codes(), ids=CODE_IDS)
+def test_no_estimate_below_first_threshold(code, tol):
+    A, B, _ = _problem()
+    P = code.run_workers(A, B)
+    order = RNG.permutation(code.N)
+    m = code.first_threshold - 1
+    if m >= 1:
+        assert code.decode(P, order, m) is None
+
+
+def test_table1_thresholds():
+    """Table I: recovery + approximate thresholds per scheme."""
+    assert MatDotCode(K, N, x_equal(N, 0.1)).recovery_threshold == 2 * K - 1
+    e = EpsApproxMatDotCode(K, N, x_equal(N, 0.1))
+    assert (e.recovery_threshold, e.first_threshold, e.n_layers) == (2 * K - 1, K, 1)
+    assert OrthoMatDotCode(K, N).recovery_threshold == 2 * K - 1
+    assert LagrangeCode(K, N).recovery_threshold == 2 * K - 1
+    g2 = GroupSACCode(K, N, x_equal(N, 0.1), [5, 3])
+    assert g2.recovery_threshold == 2 * K - 1            # D=2 → 2K-1 (App. E)
+    assert g2.first_threshold == 5
+    g3 = GroupSACCode(K, 24, x_equal(24, 0.1), [2, 4, 2])
+    assert g3.recovery_threshold == 19                   # Example 2
+    assert list(g3.S) == [2, 8, 18]                      # drop points, Fig. 2a
+    assert g3.recovery_threshold > 2 * K - 1             # D>2 → > 2K-1
+    ls = LayerSACCode(K, N, base="ortho")
+    assert (ls.recovery_threshold, ls.first_threshold) == (2 * K - 1, 1)
+    assert ls.n_layers == 2 * K - 2                      # L_{L-SAC} = 2K-2
+
+
+def test_claim1_layer_count_range():
+    """App. A: L_G-SAC = R - K_1 ∈ {R-K, ..., R-1}."""
+    for k1 in range(1, K + 1):
+        sizes = [k1, K - k1] if k1 < K else [K]
+        g = GroupSACCode(K, 2 * K - 1, x_equal(2 * K - 1, 0.1), sizes)
+        L = g.recovery_threshold - g.first_threshold
+        assert g.recovery_threshold - K <= L <= g.recovery_threshold - 1
+
+
+def test_eps_matdot_flat_between_thresholds():
+    """Fig. 3a: ε-AMD's estimate does not change for K <= m < 2K-1."""
+    A, B, C = _problem()
+    code = EpsApproxMatDotCode(K, N, x_complex(N, 0.1))
+    P = code.run_workers(A, B)
+    order = RNG.permutation(N)
+    errs = [_rel(code.decode(P, order, m), C) for m in range(K, 2 * K - 1)]
+    assert np.allclose(errs, errs[0])
+
+
+def test_gsac_layers_improve_within_group():
+    """Within a group, each extra worker slightly improves the fit (§III)."""
+    A, B, C = _problem()
+    code = GroupSACCode(K, N, x_complex(N, 0.1), [8], rng=RNG)
+    P = code.run_workers(A, B)
+    errs = []
+    for m in range(8, 15):
+        est = code.decode(P, np.arange(N), m)
+        errs.append(_rel(est, C))
+    # truncation error shrinks with fit order: strictly decreasing here
+    assert errs[-1] < errs[0] * 1e-2
+
+
+def test_lsac_estimates_from_first_worker():
+    A, B, C = _problem()
+    for base in ("ortho", "lagrange"):
+        code = LayerSACCode(K, N, base=base, eps=1e-3)
+        P = code.run_workers(A, B)
+        order = RNG.permutation(N)
+        est1 = code.decode(P, order, 1)
+        assert est1 is not None and np.isfinite(_rel(est1, C))
+        # error at m = N-? near recovery should be far smaller than at m=1
+        e_lo = _rel(code.decode(P, order, 1), C)
+        e_hi = _rel(code.decode(P, order, 14), C)
+        assert e_hi < e_lo
+
+
+def test_decode_ignores_stragglers():
+    """Only the first m completions matter — a straggler's product can be
+    garbage without affecting the estimate (the fault-tolerance property)."""
+    A, B, C = _problem()
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    P = code.run_workers(A, B)
+    order = RNG.permutation(N)
+    m = code.recovery_threshold
+    P_bad = P.copy()
+    P_bad[order[m:]] = np.nan                 # stragglers return garbage
+    est = code.decode(P_bad, order, m)
+    assert _rel(est, C) < 1e-6
+
+
+def test_registry_roundtrip():
+    for name in ("matdot", "eps_matdot", "orthomatdot", "lagrange"):
+        code = make_code(name, K, N, eval_points=None if name in
+                         ("orthomatdot", "lagrange") else x_equal(N, 0.2))
+        assert code.N == N and code.K == K

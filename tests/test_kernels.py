@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.coded_matmul.kernel import coded_matmul_pallas
+from repro.kernels.coded_matmul.ref import coded_matmul_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.poly_encode.kernel import poly_encode_pallas
+from repro.kernels.poly_encode.ref import poly_encode_ref
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return {"float32": 2e-4, "bfloat16": 5e-2}[jnp.dtype(dtype).name]
+
+
+# ------------------------------------------------------------- coded matmul
+
+@pytest.mark.parametrize("W,M,Z,N", [(1, 64, 64, 64), (3, 100, 200, 60),
+                                     (2, 96, 200, 64), (4, 33, 77, 129),
+                                     (1, 128, 1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coded_matmul_matches_ref(W, M, Z, N, dtype):
+    A = jnp.asarray(RNG.standard_normal((W, M, Z)), dtype)
+    B = jnp.asarray(RNG.standard_normal((W, Z, N)), dtype)
+    got = coded_matmul_pallas(A, B, bm=32, bn=32, bz=64, interpret=True)
+    want = coded_matmul_ref(A, B)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * Z ** 0.5)
+
+
+@pytest.mark.parametrize("blocks", [(16, 16, 16), (64, 32, 128), (128, 128, 512)])
+def test_coded_matmul_block_shape_invariance(blocks):
+    bm, bn, bz = blocks
+    A = jnp.asarray(RNG.standard_normal((2, 80, 160)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((2, 160, 72)), jnp.float32)
+    got = coded_matmul_pallas(A, B, bm=bm, bn=bn, bz=bz, interpret=True)
+    np.testing.assert_allclose(got, coded_matmul_ref(A, B), rtol=2e-4,
+                               atol=1e-3)
+
+
+# -------------------------------------------------------------- poly encode
+
+@pytest.mark.parametrize("W,K,R,C", [(24, 8, 100, 1000), (5, 3, 70, 33),
+                                     (2, 1, 16, 16), (7, 11, 129, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_poly_encode_matches_ref(W, K, R, C, dtype):
+    G = jnp.asarray(RNG.standard_normal((W, K)), jnp.float32)
+    X = jnp.asarray(RNG.standard_normal((K, R, C)), dtype)
+    got = poly_encode_pallas(G, X, br=32, bc=32, interpret=True)
+    want = poly_encode_ref(G, X)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * K)
+
+
+def test_poly_encode_is_the_paper_encoder():
+    """Kernel encode == CDC code encode (MatDot generator)."""
+    from repro.core import MatDotCode, split_contraction, x_equal
+    code = MatDotCode(4, 9, x_equal(9, 0.5))
+    A = RNG.standard_normal((32, 64))
+    Ab, _ = split_contraction(A, RNG.standard_normal((64, 8)), 4)
+    G_A, _ = code.generator()
+    got = poly_encode_pallas(jnp.asarray(G_A, jnp.float32),
+                             jnp.asarray(Ab, jnp.float32),
+                             br=16, bc=16, interpret=True)
+    want = np.einsum("nk,kij->nij", G_A, Ab)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- ssm scan
+
+@pytest.mark.parametrize("Bt,L,Dm,S", [(1, 32, 16, 4), (2, 48, 24, 16),
+                                       (2, 100, 40, 8), (1, 33, 17, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssm_scan_matches_ref(Bt, L, Dm, S, dtype):
+    x = jnp.asarray(RNG.standard_normal((Bt, L, Dm)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bt, L, Dm)), dtype)
+    A = jnp.asarray(-RNG.uniform(0.1, 1.0, (Dm, S)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bt, L, S)), dtype)
+    C = jnp.asarray(RNG.standard_normal((Bt, L, S)), dtype)
+    D = jnp.asarray(RNG.standard_normal((Dm,)), jnp.float32)
+    got = ssm_scan_pallas(x, dt, A, B, C, D, bd=8, bl=16, interpret=True)
+    want = ssm_scan_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssm_scan_chunking_invariance():
+    """Carried state across L-chunks must equal one long scan."""
+    Bt, L, Dm, S = 1, 64, 8, 4
+    x = jnp.asarray(RNG.standard_normal((Bt, L, Dm)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bt, L, Dm)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.1, 1.0, (Dm, S)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bt, L, S)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bt, L, S)), jnp.float32)
+    D = jnp.asarray(RNG.standard_normal((Dm,)), jnp.float32)
+    full = ssm_scan_pallas(x, dt, A, B, C, D, bd=8, bl=64, interpret=True)
+    for bl in (8, 16, 32):
+        got = ssm_scan_pallas(x, dt, A, B, C, D, bd=8, bl=bl, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("B,H,Hkv,Lq,Lkv,d", [
+    (1, 2, 2, 64, 64, 16),          # MHA square
+    (2, 4, 2, 64, 64, 32),          # GQA
+    (1, 8, 1, 32, 32, 16),          # MQA
+    (1, 2, 1, 16, 80, 16),          # decode-suffix (Lq < Lkv)
+    (1, 2, 2, 50, 70, 16),          # non-divisible remainder blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(B, H, Hkv, Lq, Lkv, d, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, H, Lq, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, Lkv, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, Lkv, d)), dtype)
+    off = Lkv - Lq
+    got = flash_attention_pallas(q, k, v, q_offset=off, bq=16, bkv=16,
+                                 interpret=True)
+    want = attention_ref(q, k, v, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_flash_sliding_window(window):
+    B, H, L, d = 1, 2, 96, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, window=window, bq=16, bkv=16,
+                                 interpret=True)
+    want = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_noncausal():
+    B, H, L, d = 1, 2, 48, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, L, d)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, bq=16, bkv=16,
+                                 interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)

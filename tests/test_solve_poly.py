@@ -1,0 +1,116 @@
+"""Decode linear algebra + polynomial bases: unit & property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import chebyshev_roots, extraction_weights, fit_coefficients
+from repro.core.poly import (ChebyshevBasis, MonomialBasis, chebyshev_T,
+                             lagrange_eval, monomial_eval, orthonormal_eval)
+
+
+def test_chebyshev_recursion_vs_cos():
+    """T_n(cos θ) = cos(nθ)."""
+    theta = np.linspace(0.1, 3.0, 7)
+    x = np.cos(theta)
+    T = chebyshev_T(x, 10)
+    for n in range(11):
+        np.testing.assert_allclose(T[:, n], np.cos(n * theta), atol=1e-12)
+
+
+def test_chebyshev_roots_are_roots():
+    for n in (3, 8, 24):
+        r = chebyshev_roots(n)
+        T = chebyshev_T(r, n)
+        np.testing.assert_allclose(T[:, n], 0.0, atol=1e-12)
+        assert len(np.unique(r)) == n
+
+
+def test_orthonormality_under_quadrature():
+    """(2/K) Σ_k O_i(η_k)O_j(η_k) = δ_ij for i+j <= 2K-1 (Gauss-Chebyshev)."""
+    K = 8
+    eta = chebyshev_roots(K)
+    V = orthonormal_eval(eta, np.arange(K))
+    G = (2.0 / K) * V.T @ V
+    np.testing.assert_allclose(G, np.eye(K), atol=1e-12)
+
+
+def test_lagrange_cardinality():
+    y = np.arange(1.0, 6.0)
+    V = lagrange_eval(y, y)
+    np.testing.assert_allclose(V, np.eye(5), atol=1e-12)
+
+
+def test_extraction_weights_equals_fit_then_extract():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=9)
+    V = monomial_eval(x, np.arange(9))
+    d = rng.standard_normal((9, 4))              # matrix-valued evaluations
+    c = fit_coefficients(V, d)
+    a = rng.standard_normal(9)
+    w = extraction_weights(V, a)
+    np.testing.assert_allclose(w @ d, np.einsum("p,p...->...", a, c), rtol=1e-8)
+
+
+def test_extraction_weights_lstsq_path():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-1, 1, size=12)
+    V = monomial_eval(x, np.arange(7))            # overdetermined 12x7
+    d_true_coeffs = rng.standard_normal(7)
+    d = V @ d_true_coeffs
+    a = np.zeros(7); a[3] = 1.0
+    w = extraction_weights(V, a)
+    np.testing.assert_allclose(w @ d, d_true_coeffs[3], rtol=1e-9)
+
+
+def test_monomial_scaling_improves_conditioning():
+    x = 0.05 * np.arange(1, 16) / 15
+    raw = MonomialBasis(scale=None).eval_matrix(x, 15)
+    scaled = MonomialBasis(scale=float(x.max())).eval_matrix(x, 15)
+    assert np.linalg.cond(scaled) < np.linalg.cond(raw) / 1e10
+
+
+def test_monomial_scaled_coefficient_extraction_consistent():
+    """Scaled fit + scaled functional == raw coefficients."""
+    rng = np.random.default_rng(2)
+    coeffs = rng.standard_normal(6)
+    x = rng.uniform(0.01, 0.2, size=6)
+    d = monomial_eval(x, np.arange(6)) @ coeffs
+    basis = MonomialBasis(scale=float(np.max(np.abs(x))))
+    V = basis.eval_matrix(x, 6)
+    for deg in range(6):
+        w = extraction_weights(V, basis.coeff_functional(deg, 6))
+        np.testing.assert_allclose(w @ d, coeffs[deg], rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=2, max_value=9), st.integers(min_value=0, max_value=10_000))
+def test_property_poly_fit_roundtrip(p, seed):
+    """Fitting p points of a degree-(p-1) polynomial recovers it exactly."""
+    rng = np.random.default_rng(seed)
+    coeffs = rng.standard_normal(p)
+    x = np.linspace(-1, 1, p) + rng.uniform(-0.01, 0.01, p)
+    for basis in (MonomialBasis(), MonomialBasis(scale=1.0), ChebyshevBasis()):
+        V = basis.eval_matrix(x, p)
+        d = monomial_eval(x, np.arange(p)) @ coeffs
+        c = fit_coefficients(V, d)
+        # evaluate the fit somewhere new — must match the original polynomial
+        xt = np.array([0.37])
+        Vt = basis.eval_matrix(xt, p)
+        np.testing.assert_allclose(Vt @ c, monomial_eval(xt, np.arange(p)) @ coeffs,
+                                   rtol=1e-5, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=10_000))
+def test_property_exact_recovery_matdot_any_K(K, seed):
+    """MatDot decodes exactly for arbitrary K and shapes (property)."""
+    from repro.core import MatDotCode, x_complex
+    rng = np.random.default_rng(seed)
+    N = 2 * K + 1
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    A = rng.standard_normal((3, 2 * K))
+    B = rng.standard_normal((2 * K, 4))
+    P = code.run_workers(A, B)
+    est = code.decode(P, rng.permutation(N), 2 * K - 1)
+    np.testing.assert_allclose(est, A @ B, rtol=1e-5, atol=1e-8)
