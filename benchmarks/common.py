@@ -1,24 +1,53 @@
-"""Shared benchmark scaffolding: paper workload, timing, CSV emission."""
+"""Shared benchmark scaffolding: paper workload, timing, CSV/JSON emission.
+
+Environment knobs (all optional):
+
+* ``REPRO_BENCH_TRIALS``  — Monte-Carlo trials per curve (paper: 100).
+* ``REPRO_BENCH_NZ``      — contraction dimension of the paper workload
+  (default 8000; ``benchmarks/run.py --quick`` shrinks it to 2000).
+* ``REPRO_BENCH_BACKEND`` — simulation-engine backend: ``numpy`` (default,
+  float64) or ``jax`` (jit+vmap over traces).
+* ``REPRO_BENCH_NORMS``   — engine error evaluation: ``exact`` (default) or
+  ``gram`` (Gram-matrix trick — fastest for large sweeps, noise floor
+  ~1e-12 of ``‖C‖²``).
+
+Quick mode (``run.py --quick``) is the CI configuration: 10 trials on the
+shrunk workload, same assertions, minutes instead of tens of minutes.  Every
+``emit()`` row is also collected in-process so ``run.py`` can drop a
+machine-readable ``BENCH_summary.json`` artifact next to the CSVs.
+"""
 from __future__ import annotations
 
+import json
 import os
 import time
 
 import numpy as np
 
 TRIALS = int(os.environ.get("REPRO_BENCH_TRIALS", "100"))
+NZ = int(os.environ.get("REPRO_BENCH_NZ", "8000"))
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "bench")
 
+_ROWS: list[dict] = []
+
+
+def sim_kwargs() -> dict:
+    """Engine configuration for ``average_curves`` — env-switchable."""
+    return {"backend": os.environ.get("REPRO_BENCH_BACKEND", "numpy"),
+            "norms": os.environ.get("REPRO_BENCH_NORMS", "exact")}
+
 
 def paper_problem(rng: np.random.Generator):
-    """§V: A (100×8000) @ B (8000×100), i.i.d. N(0,1)."""
-    return rng.standard_normal((100, 8000)), rng.standard_normal((8000, 100))
+    """§V: A (100×Nz) @ B (Nz×100), i.i.d. N(0,1); Nz=8000 in the paper."""
+    return rng.standard_normal((100, NZ)), rng.standard_normal((NZ, 100))
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
     """The required CSV row: ``name,us_per_call,derived``."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": us_per_call,
+                  "derived": str(derived)})
 
 
 def timed(fn, *args, repeats: int = 3, **kw):
@@ -39,3 +68,13 @@ def save_rows(fname: str, header: str, rows) -> None:
         f.write(header + "\n")
         for r in rows:
             f.write(",".join(str(x) for x in r) + "\n")
+
+
+def write_bench_json(fname: str = "BENCH_summary.json") -> str:
+    """Dump every emitted row + the run configuration as one JSON artifact."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        json.dump({"config": {"trials": TRIALS, "nz": NZ, **sim_kwargs()},
+                   "rows": _ROWS}, f, indent=2)
+    return path

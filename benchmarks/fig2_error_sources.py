@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import (GroupSACCode, LayerSACCode, average_curves,
                         x_complex, x_equal)
 
-from .common import TRIALS, emit, paper_problem, save_rows, timed
+from .common import TRIALS, emit, paper_problem, save_rows, sim_kwargs, timed
 
 
 def gsac_factory(points):
@@ -43,7 +43,7 @@ def panel_ab():
             ("gsac_complex", gsac_factory(x_complex(24, 0.15))),
             ("lsac_ortho", lsac_factory(0.0125))]:
         cur, us = timed(average_curves, factory, A, B, trials=TRIALS,
-                        seed=2, repeats=1)
+                        seed=2, repeats=1, **sim_kwargs())
         curves[label] = cur
         for m, tot, ap, cp in zip(cur.ms, cur.total, cur.approx, cur.comp):
             rows.append((label, m, f"{tot:.4e}", f"{ap:.4e}", f"{cp:.4e}"))
@@ -76,12 +76,13 @@ def panel_cd():
                       ("gsac_complex", lambda e: gsac_factory(x_complex(24, e)))]:
         for e in eps_grid:
             cur = average_curves(mk(e), A, B, trials=max(TRIALS // 4, 10),
-                                 seed=4, ms=[m])
+                                 seed=4, ms=[m], **sim_kwargs())
             rows.append((label, e, f"{cur.approx[m-1]:.4e}",
                          f"{cur.comp[m-1]:.4e}"))
     for e in [1e-5, 3e-5, 6e-5, 1e-4, 1e-3, 1e-2]:
         cur = average_curves(lsac_factory(e), A, B,
-                             trials=max(TRIALS // 4, 10), seed=4, ms=[m])
+                             trials=max(TRIALS // 4, 10), seed=4, ms=[m],
+                             **sim_kwargs())
         rows.append(("lsac_ortho", e, f"{cur.approx[m-1]:.4e}",
                      f"{cur.comp[m-1]:.4e}"))
     save_rows("fig2cd.csv", "scheme,eps,approx_m8,comp_m8", rows)

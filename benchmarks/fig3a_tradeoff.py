@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import average_curves, paper_fig3a_codes
 
-from .common import TRIALS, emit, paper_problem, save_rows, timed
+from .common import TRIALS, emit, paper_problem, save_rows, sim_kwargs, timed
 
 
 def main():
@@ -23,7 +23,7 @@ def main():
     rows, curves = [], {}
     for name, factory in factories.items():
         cur, us = timed(average_curves, factory, A, B, trials=TRIALS,
-                        seed=6, repeats=1)
+                        seed=6, repeats=1, **sim_kwargs())
         curves[name] = cur
         for m, tot in zip(cur.ms, cur.total):
             rows.append((name, m, f"{tot:.4e}"))

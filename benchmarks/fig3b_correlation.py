@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
                         average_curves, correlated_problem, x_complex)
 
-from .common import TRIALS, emit, save_rows
+from .common import TRIALS, emit, save_rows, sim_kwargs
 
 
 def factories():
@@ -42,7 +42,7 @@ def main():
         A, B = correlated_problem(rng, lam, K=8)
         for name, (factory, beta_mode) in factories().items():
             cur = average_curves(factory, A, B, trials=trials, seed=8,
-                                 beta_mode=beta_mode, ms=[m])
+                                 beta_mode=beta_mode, ms=[m], **sim_kwargs())
             err = float(cur.total[m - 1])
             rows.append((name, lam, f"{err:.4e}"))
             table[(name, lam)] = err

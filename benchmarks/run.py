@@ -1,28 +1,52 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the full
-data tables under ``results/bench/``.  Trials default to the paper's 100;
-set REPRO_BENCH_TRIALS to trade fidelity for speed.
+Prints ``name,us_per_call,derived`` CSV rows (stdout), writes the full data
+tables under ``results/bench/`` and a machine-readable
+``results/bench/BENCH_summary.json`` (the CI artifact).
+
+Trials default to the paper's 100; ``--quick`` is the CI smoke
+configuration (10 trials, contraction dim 2000 — same assertions, minutes
+instead of tens of minutes).  Fine-grained control via REPRO_BENCH_TRIALS /
+REPRO_BENCH_NZ / REPRO_BENCH_BACKEND / REPRO_BENCH_NORMS (see
+``benchmarks/common.py``).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
 
-def main() -> None:
-    from . import (fig2_error_sources, fig3a_tradeoff, fig3b_correlation,
-                   kernel_bench, table1_thresholds)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: 10 trials, Nz=2000")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. fig3a_tradeoff)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        os.environ.setdefault("REPRO_BENCH_TRIALS", "10")
+        os.environ.setdefault("REPRO_BENCH_NZ", "2000")
+    # import AFTER the env is set: common.py reads it at import time
+    from . import (common, engine_speedup, fig2_error_sources, fig3a_tradeoff,
+                   fig3b_correlation, kernel_bench, table1_thresholds)
+    mods = [table1_thresholds, fig3a_tradeoff, fig2_error_sources,
+            fig3b_correlation, engine_speedup, kernel_bench]
+    if args.only:
+        wanted = set(args.only.split(","))
+        mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in wanted]
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (table1_thresholds, fig3a_tradeoff, fig2_error_sources,
-                fig3b_correlation, kernel_bench):
+    for mod in mods:
         try:
             mod.main()
         except Exception:
             failures += 1
             print(f"BENCH FAILURE in {mod.__name__}:", file=sys.stderr)
             traceback.print_exc()
+    path = common.write_bench_json()
+    print(f"# wrote {path}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -9,8 +9,7 @@ Run:  PYTHONPATH=src python examples/coded_matmul_service.py
 """
 import numpy as np
 
-from repro.core import (GroupSACCode, MatDotCode, simulate_completion,
-                        split_contraction, x_complex)
+from repro.core import GroupSACCode, MatDotCode, x_complex
 from repro.launch.serve import serve_request
 
 rng = np.random.default_rng(7)

@@ -1,0 +1,40 @@
+"""Version tolerance for the jax APIs this repo leans on.
+
+The runtime targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.lax.pvary``); CI and some dev containers pin older 0.4.x releases where
+those live under ``jax.experimental`` or don't exist.  Every call site routes
+through here so the shard_map code paths run — and tier-1 stays green — on
+both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "pvary"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with fallback to the pre-0.6 experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def pvary(x, axis_name):
+    """``jax.lax.pvary`` — identity on jax versions without varying-manual
+    type propagation (pre-pvary shard_map does not track it)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_name)
+    return x

@@ -8,7 +8,7 @@ decode / long-context-decode).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def _round_up(x: int, mult: int) -> int:

@@ -22,10 +22,14 @@ from .points import x_complex, x_equal
 from .poly import (ChebyshevBasis, LagrangeBasis, MonomialBasis,
                    chebyshev_roots)
 from .registry import CODE_NAMES, make_code, paper_fig3a_codes
-from .simulate import (ErrorCurves, average_curves, correlated_problem,
-                       random_problem, run_trace)
-from .solve import condition_number, extraction_weights, fit_coefficients
-from .straggler import CompletionTrace, simulate_completion
+from .simulate import (BatchErrorCurves, ErrorCurves, ProblemContext,
+                       SimulationEngine, average_curves,
+                       average_curves_reference, correlated_problem,
+                       random_problem, run_trace, run_trace_reference)
+from .solve import (condition_number, extraction_weights,
+                    extraction_weights_batch, fit_coefficients)
+from .straggler import (CompletionBatch, CompletionTrace, simulate_completion,
+                        simulate_completion_batch)
 
 __all__ = [
     "CDCCode", "DecodeInfo", "MatDotCode", "EpsApproxMatDotCode",
@@ -34,8 +38,11 @@ __all__ = [
     "paper_fig3a_codes", "x_equal", "x_complex", "split_contraction",
     "block_outer_products", "thm1_beta", "thm1_moments", "thm2_beta",
     "thm2_gammas", "group_beta", "layer_beta", "eq5_beta",
-    "extraction_weights", "fit_coefficients", "condition_number",
-    "ErrorCurves", "run_trace", "average_curves", "random_problem",
-    "correlated_problem", "CompletionTrace", "simulate_completion",
-    "chebyshev_roots", "MonomialBasis", "ChebyshevBasis", "LagrangeBasis",
+    "extraction_weights", "extraction_weights_batch", "fit_coefficients",
+    "condition_number", "ErrorCurves", "BatchErrorCurves", "ProblemContext",
+    "SimulationEngine", "run_trace", "run_trace_reference", "average_curves",
+    "average_curves_reference", "random_problem", "correlated_problem",
+    "CompletionTrace", "CompletionBatch", "simulate_completion",
+    "simulate_completion_batch", "chebyshev_roots", "MonomialBasis",
+    "ChebyshevBasis", "LagrangeBasis",
 ]

@@ -12,6 +12,18 @@ with ``w: (m,)`` such that the **pre-β** estimate is
 ``Σ_i w_i · P_{completed[i]}``; ``info`` carries whatever the β rule needs
 (recovered-pair count for Thm. 1, hit clusters for Thm. 2).  Returns ``None``
 below the code's first threshold.
+
+Batched protocol (Monte-Carlo engine): ``estimate_weights_batch(orders, m)``
+takes a whole stack of completion orders ``(trials, N)`` and returns the
+*scattered* pre-β weight matrix ``W: (trials, N)`` (zero for stragglers) in
+one stacked Vandermonde solve, plus one :class:`DecodeInfo` (whether an
+estimate exists at m, and which β inputs apply, are order-independent for
+every code here, so a single info covers the batch; per-trace detail such as
+hit clusters rides in ``info.extra``).  ``ideal_basis`` /
+``ideal_weights_batch`` expose the analytic path the same way: every ideal
+estimate is a linear combination of a small per-code stack of matrices
+(group partial sums, anchor products, exact C), so the engine evaluates all
+trials × m with einsums over one precomputed basis.
 """
 from __future__ import annotations
 
@@ -21,6 +33,7 @@ from typing import Any
 import numpy as np
 
 from ..partition import block_outer_products, split_contraction
+from ..solve import extraction_weights_batch
 
 __all__ = ["CDCCode", "DecodeInfo"]
 
@@ -95,6 +108,91 @@ class CDCCode:
         """Weights over the first ``m`` completed workers, or ``None``."""
         raise NotImplementedError
 
+    # --------------------------------------------------------- batched decode
+    def _scatter_weights(self, orders: np.ndarray, w: np.ndarray) -> np.ndarray:
+        """Scatter per-trace weights ``(T, p)`` over worker index → ``(T, N)``."""
+        orders = np.asarray(orders)
+        T, p = w.shape
+        W = np.zeros((T, self.N), dtype=w.dtype)
+        W[np.arange(T)[:, None], orders[:, :p]] = w
+        return W
+
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        """Scattered pre-β weights for a stack of completion orders.
+
+        ``orders: (T, N)`` → ``(W: (T, N), info)`` or ``None`` below the
+        first threshold.  Base implementation loops over
+        :meth:`estimate_weights`; subclasses replace it with one stacked
+        extraction solve (identical per-trace results, no Python loop).
+
+        Decodability at a given ``m`` must be completion-order-independent
+        (true for every code in this repo — thresholds depend on counts, not
+        on which workers finished).  A subclass violating that must override
+        this method; the fallback raises rather than silently averaging a
+        partially-decodable batch.
+        """
+        orders = np.asarray(orders)
+        res = [self.estimate_weights(o[:m], m) for o in orders]
+        missing = [r is None for r in res]
+        if all(missing):
+            return None
+        if any(missing):
+            raise NotImplementedError(
+                f"{type(self).__name__}: decodability at m={m} varies with "
+                "completion order; override estimate_weights_batch")
+        info = res[0][1]
+        return self._scatter_weights(orders, np.stack([r[0] for r in res])), \
+            info
+
+    def _point_decode_batch(self, orders: np.ndarray):
+        """Stacked exact decode for point-based codes (OrthoMatDot/Lagrange/
+        L-SAC): fit at the first R completions, extract the anchor-point sum.
+
+        Requires ``decode_basis``, ``anchors`` and ``alphas`` attributes.
+        """
+        R = self.recovery_threshold
+        orders = np.asarray(orders)
+        xs = self.eval_points[orders[:, :R]]
+        V = self.decode_basis.eval_matrix(xs, R)
+        a = self.decode_basis.point_functional(self.anchors, self.alphas, R)
+        w = extraction_weights_batch(V, a)
+        return self._scatter_weights(orders, w), \
+            DecodeInfo(exact=True, m_pairs=self.K)
+
+    # ------------------------------------------------- batched analytic path
+    def ideal_basis(self, A_blocks, B_blocks, oracle: dict | None = None):
+        """Stack ``(Q, Nx, Ny)`` every ideal estimate is a linear combo of.
+
+        Default: the single matrix ``C`` (exact recovery is the only ideal
+        estimate codes without resolution layers produce).
+        """
+        C = np.einsum("kij,kjl->il", np.asarray(A_blocks), np.asarray(B_blocks))
+        return C[None]
+
+    def ideal_weights_batch(self, orders: np.ndarray, m: int,
+                            beta_mode: str = "one",
+                            oracle: dict | None = None):
+        """β-scaled weights over :meth:`ideal_basis` rows for a trace stack.
+
+        Returns ``(Q,)`` when the combination is trace-independent,
+        ``(T, Q)`` when it varies per trace (layer-wise SAC hit patterns),
+        or ``None`` where no analytic estimate exists.
+        """
+        if m >= self.recovery_threshold:
+            return np.ones(1)
+        return None
+
+    # ------------------------------------------------------------- identity
+    def cache_key(self) -> tuple:
+        """Hashable decode identity: trials whose codes share a key produce
+        identical worker products and decode weights, so the batched engine
+        can group them (``average_curves`` resamples the code per trial)."""
+        return ((type(self).__name__, self.K, self.N,
+                 self.eval_points.tobytes()) + self._extra_key())
+
+    def _extra_key(self) -> tuple:
+        return ()
+
     def beta(self, info: DecodeInfo, m: int, mode: str = "one",
              oracle: dict | None = None) -> float:
         """β rule for this code family; overridden by SAC codes."""
@@ -130,10 +228,17 @@ class CDCCode:
         return None
 
     # ------------------------------------------------------------- utilities
-    def oracle_context(self, A_blocks, B_blocks) -> dict:
-        """Precomputed quantities the β oracle / ideal path may need."""
-        return {"block_products": block_outer_products(np.asarray(A_blocks),
-                                                       np.asarray(B_blocks))}
+    def oracle_context(self, A_blocks, B_blocks, *,
+                       block_products=None) -> dict:
+        """Precomputed quantities the β oracle / ideal path may need.
+
+        ``block_products`` lets the batched engine reuse the (code-independent)
+        ``A_k @ B_k`` stack across the per-trial code instances of a sweep.
+        """
+        if block_products is None:
+            block_products = block_outer_products(np.asarray(A_blocks),
+                                                  np.asarray(B_blocks))
+        return {"block_products": block_products}
 
     def __repr__(self):
         return (f"{type(self).__name__}(K={self.K}, N={self.N}, "

@@ -25,7 +25,7 @@ import numpy as np
 
 from ..beta import group_beta
 from ..poly import MonomialBasis, monomial_eval
-from ..solve import extraction_weights
+from ..solve import extraction_weights, extraction_weights_batch
 from .base import CDCCode, DecodeInfo
 
 __all__ = ["GroupSACCode", "group_thresholds"]
@@ -120,6 +120,26 @@ class GroupSACCode(CDCCode):
         return w, DecodeInfo(exact=exact, m_pairs=m_pairs, layer=layer,
                              extra={"groups": avail})
 
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        if m < self.first_threshold:
+            return None
+        R = self._R
+        exact = m >= R
+        p = R if exact else m
+        orders = np.asarray(orders)
+        xs = self.eval_points[orders[:, :p]]
+        avail = np.arange(len(self.S)) if exact else self.available_groups(m)
+        V = self.decode_basis.eval_matrix(xs, p)
+        a = np.zeros(p, dtype=np.float64)
+        for d in avail:
+            a = a + self.decode_basis.coeff_functional(int(self.S[d] - 1), p)
+        w = extraction_weights_batch(V, a)
+        m_pairs = int(self.group_sizes[avail].sum())
+        layer = None if exact else m - self.first_threshold + 1
+        return self._scatter_weights(orders, w), \
+            DecodeInfo(exact=exact, m_pairs=m_pairs, layer=layer,
+                       extra={"groups": avail})
+
     def beta(self, info: DecodeInfo, m: int, mode: str = "one",
              oracle: dict | None = None) -> float:
         if info.exact or info.m_pairs >= self.K:
@@ -147,3 +167,41 @@ class GroupSACCode(CDCCode):
         b = self.beta(DecodeInfo(exact=False, m_pairs=m_pairs), m,
                       beta_mode, oracle)
         return b * part
+
+    def ideal_basis(self, A_blocks, B_blocks, oracle: dict | None = None):
+        """Per-group true partial sums plus exact C — ``(D + 1, Nx, Ny)``.
+
+        Reuses the oracle's precomputed ``A_k B_k`` stack when present (the
+        engine shares it problem-wide) so per-shuffle instances don't redo
+        block matmuls.
+        """
+        bp = oracle.get("block_products") if oracle else None
+        if bp is None:
+            A_blocks = np.asarray(A_blocks)
+            B_blocks = np.asarray(B_blocks)
+            bp = np.einsum("kij,kjl->kil", A_blocks, B_blocks)
+        bp = np.asarray(bp)
+        parts = [bp[self.permutation[self._group_of == d]].sum(axis=0)
+                 for d in range(len(self.group_sizes))]
+        parts.append(bp.sum(axis=0))
+        return np.stack(parts)
+
+    def ideal_weights_batch(self, orders, m, beta_mode: str = "one",
+                            oracle: dict | None = None):
+        if m < self.first_threshold:
+            return None
+        D = len(self.group_sizes)
+        w = np.zeros(D + 1)
+        if m >= self._R:
+            w[D] = 1.0
+            return w
+        avail = self.available_groups(m)
+        m_pairs = int(self.group_sizes[avail].sum())
+        b = self.beta(DecodeInfo(exact=False, m_pairs=m_pairs), m,
+                      beta_mode, oracle)
+        w[avail] = b
+        return w
+
+    def _extra_key(self) -> tuple:
+        return (self.group_sizes.tobytes(), self.permutation.tobytes()) \
+            + self.decode_basis.cache_key()

@@ -67,6 +67,14 @@ class LagrangeCode(CDCCode):
         w = extraction_weights(V, a)
         return w, DecodeInfo(exact=True, m_pairs=self.K)
 
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        if m < self.recovery_threshold:
+            return None
+        return self._point_decode_batch(orders)
+
+    def _extra_key(self) -> tuple:
+        return (self.anchors.tobytes(),) + self.decode_basis.cache_key()
+
     def anchor_products(self, A_blocks, B_blocks) -> np.ndarray:
         """``L̃_A(y_k) L̃_B(y_k) = A_k B_k`` — (K, Nx, Ny)."""
         return np.einsum("kij,kjl->kil", np.asarray(A_blocks),

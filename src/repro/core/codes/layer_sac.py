@@ -115,6 +115,28 @@ class LayerSACCode(CDCCode):
         return w, DecodeInfo(exact=False, m_pairs=int(hit.sum()),
                              layer=m, extra={"hit": hit})
 
+    def _hit_counts(self, orders: np.ndarray, m: int) -> np.ndarray:
+        """Per-trace cluster completion counts ``(T, K)``."""
+        ks = self.cluster[np.asarray(orders)[:, :m]]
+        T = ks.shape[0]
+        counts = np.zeros((T, self.K), dtype=np.int64)
+        np.add.at(counts, (np.repeat(np.arange(T), m), ks.ravel()), 1)
+        return counts
+
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        orders = np.asarray(orders)
+        if m >= self.recovery_threshold:
+            return self._point_decode_batch(orders)
+        # eq. (2) batched: per-trace cluster-averaged weights
+        ks = self.cluster[orders[:, :m]]
+        counts = self._hit_counts(orders, m)
+        rows = np.arange(orders.shape[0])[:, None]
+        w = self.alphas[ks] / counts[rows, ks]
+        hits = counts > 0
+        return self._scatter_weights(orders, w), \
+            DecodeInfo(exact=False, m_pairs=int(hits[0].sum()), layer=m,
+                       extra={"hit": hits[0], "hits": hits})
+
     def beta(self, info: DecodeInfo, m: int, mode: str = "one",
              oracle: dict | None = None) -> float:
         if info.exact:
@@ -134,8 +156,10 @@ class LayerSACCode(CDCCode):
         return np.einsum("kij,kjl->kil", np.asarray(A_blocks),
                          np.asarray(B_blocks))
 
-    def oracle_context(self, A_blocks, B_blocks) -> dict:
-        ctx = super().oracle_context(A_blocks, B_blocks)
+    def oracle_context(self, A_blocks, B_blocks, *,
+                       block_products=None) -> dict:
+        ctx = super().oracle_context(A_blocks, B_blocks,
+                                     block_products=block_products)
         ctx["anchor_products"] = self.anchor_products(A_blocks, B_blocks)
         return ctx
 
@@ -156,3 +180,31 @@ class LayerSACCode(CDCCode):
                           extra={"hit": hit})
         return self.beta(info, m, beta_mode,
                          oracle or {"anchor_products": ap}) * est
+
+    def ideal_basis(self, A_blocks, B_blocks, oracle: dict | None = None):
+        """Anchor products plus exact C — ``(K + 1, Nx, Ny)``."""
+        if oracle is not None and "anchor_products" in oracle:
+            ap = oracle["anchor_products"]
+        else:
+            ap = self.anchor_products(A_blocks, B_blocks)
+        C = np.einsum("kij,kjl->il", np.asarray(A_blocks),
+                      np.asarray(B_blocks))
+        return np.concatenate([np.asarray(ap), C[None]])
+
+    def ideal_weights_batch(self, orders, m, beta_mode: str = "one",
+                            oracle: dict | None = None):
+        K = self.K
+        if m >= self.recovery_threshold:
+            w = np.zeros(K + 1)
+            w[K] = 1.0
+            return w
+        hits = self._hit_counts(orders, m) > 0
+        info = DecodeInfo(exact=False, m_pairs=int(hits[0].sum()), layer=m)
+        b = self.beta(info, m, beta_mode, oracle)
+        W = np.zeros((hits.shape[0], K + 1))
+        W[:, :K] = b * (self.alphas * hits)
+        return W
+
+    def _extra_key(self) -> tuple:
+        return (self.base, self.eps, self.n_sizes.tobytes(),
+                self.anchors.tobytes()) + self.decode_basis.cache_key()

@@ -16,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..poly import MonomialBasis, monomial_eval
-from ..solve import extraction_weights
+from ..solve import extraction_weights, extraction_weights_batch
 from .base import CDCCode, DecodeInfo
 
 __all__ = ["MatDotCode", "EpsApproxMatDotCode"]
@@ -54,6 +54,15 @@ class MatDotCode(CDCCode):
             a = a + self.decode_basis.coeff_functional(d, p)
         return extraction_weights(V, a)
 
+    def _coeff_weights_batch(self, xs: np.ndarray, p: int,
+                             target_degrees) -> np.ndarray:
+        """Stacked :meth:`_coeff_weights` over ``xs: (T, >=p)`` traces."""
+        V = self.decode_basis.eval_matrix(xs[:, :p], p)
+        a = np.zeros(p, dtype=np.float64)
+        for d in target_degrees:
+            a = a + self.decode_basis.coeff_functional(d, p)
+        return extraction_weights_batch(V, a)
+
     def estimate_weights(self, completed: np.ndarray, m: int):
         R = self.recovery_threshold
         if m < R:
@@ -61,6 +70,19 @@ class MatDotCode(CDCCode):
         xs = self.eval_points[completed]
         w = self._coeff_weights(xs, R, [self.K - 1])
         return w, DecodeInfo(exact=True, m_pairs=self.K)
+
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        R = self.recovery_threshold
+        if m < R:
+            return None
+        orders = np.asarray(orders)
+        xs = self.eval_points[orders[:, :R]]
+        w = self._coeff_weights_batch(xs, R, [self.K - 1])
+        return self._scatter_weights(orders, w), \
+            DecodeInfo(exact=True, m_pairs=self.K)
+
+    def _extra_key(self) -> tuple:
+        return self.decode_basis.cache_key()
 
 
 class EpsApproxMatDotCode(MatDotCode):
@@ -87,6 +109,21 @@ class EpsApproxMatDotCode(MatDotCode):
         w = self._coeff_weights(xs, K, [K - 1])
         return w, DecodeInfo(exact=False, m_pairs=K, layer=1)
 
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        K, R = self.K, self.recovery_threshold
+        if m < K:
+            return None
+        orders = np.asarray(orders)
+        if m >= R:
+            xs = self.eval_points[orders[:, :R]]
+            w = self._coeff_weights_batch(xs, R, [K - 1])
+            return self._scatter_weights(orders, w), \
+                DecodeInfo(exact=True, m_pairs=K)
+        xs = self.eval_points[orders[:, :K]]
+        w = self._coeff_weights_batch(xs, K, [K - 1])
+        return self._scatter_weights(orders, w), \
+            DecodeInfo(exact=False, m_pairs=K, layer=1)
+
     def ideal_estimate(self, order, m, A_blocks, B_blocks,
                        beta_mode: str = "one", oracle=None):
         # the layer recovers the *full* sum (all K pairs) up to truncation, so
@@ -94,4 +131,10 @@ class EpsApproxMatDotCode(MatDotCode):
         if m >= self.K:
             return np.einsum("kij,kjl->il", np.asarray(A_blocks),
                              np.asarray(B_blocks))
+        return None
+
+    def ideal_weights_batch(self, orders, m, beta_mode: str = "one",
+                            oracle=None):
+        if m >= self.K:
+            return np.ones(1)
         return None

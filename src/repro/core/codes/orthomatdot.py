@@ -52,6 +52,11 @@ class OrthoMatDotCode(CDCCode):
         w = extraction_weights(V, a)
         return w, DecodeInfo(exact=True, m_pairs=self.K)
 
+    def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        if m < self.recovery_threshold:
+            return None
+        return self._point_decode_batch(orders)
+
     def anchor_products(self, A_blocks, B_blocks) -> np.ndarray:
         """``S̃_A(y_k) S̃_B(y_k)`` at the quadrature anchors — (K, Nx, Ny)."""
         Vy = orthonormal_eval(self.anchors, np.arange(self.K))

@@ -27,10 +27,10 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def monomial_eval(x: np.ndarray, degrees) -> np.ndarray:
-    """``V[i, j] = x_i ** degrees[j]``."""
+    """``V[..., i, j] = x[..., i] ** degrees[j]`` (batched over leading dims)."""
     x = np.asarray(x)
     degrees = np.asarray(degrees)
-    return x[:, None] ** degrees[None, :]
+    return x[..., :, None] ** degrees
 
 
 def chebyshev_T(x: np.ndarray, max_degree: int) -> np.ndarray:
@@ -85,12 +85,12 @@ def lagrange_eval(x: np.ndarray, anchors: np.ndarray) -> np.ndarray:
     x = np.asarray(x)
     y = np.asarray(anchors, dtype=np.float64)
     K = y.shape[0]
-    V = np.ones((x.shape[0], K), dtype=np.result_type(x, np.float64))
+    V = np.ones(x.shape + (K,), dtype=np.result_type(x, np.float64))
     for k in range(K):
         for j in range(K):
             if j == k:
                 continue
-            V[:, k] *= (x - y[j]) / (y[k] - y[j])
+            V[..., k] *= (x - y[j]) / (y[k] - y[j])
     return V
 
 
@@ -112,6 +112,10 @@ class Basis:
     def eval_matrix(self, x: np.ndarray, p: int) -> np.ndarray:  # pragma: no cover
         raise NotImplementedError
 
+    def cache_key(self) -> tuple:
+        """Hashable identity — lets the batched engine group equivalent codes."""
+        return (self.name,)
+
 
 class MonomialBasis(Basis):
     """Monomial basis with optional column scaling.
@@ -129,6 +133,9 @@ class MonomialBasis(Basis):
 
     def __init__(self, scale: float | None = None):
         self.scale = scale
+
+    def cache_key(self) -> tuple:
+        return (self.name, self.scale)
 
     def eval_matrix(self, x: np.ndarray, p: int) -> np.ndarray:
         x = np.asarray(x)
@@ -180,6 +187,9 @@ class MappedChebyshevBasis(Basis):
             raise ValueError("need hi > lo")
         self.lo, self.hi = float(lo), float(hi)
 
+    def cache_key(self) -> tuple:
+        return (self.name, self.lo, self.hi)
+
     def _map(self, x):
         return (2.0 * np.asarray(x) - self.lo - self.hi) / (self.hi - self.lo)
 
@@ -204,6 +214,9 @@ class LagrangeBasis(Basis):
 
     def __init__(self, anchors: np.ndarray):
         self.anchors = np.asarray(anchors, dtype=np.float64)
+
+    def cache_key(self) -> tuple:
+        return (self.name, self.anchors.tobytes())
 
     def eval_matrix(self, x: np.ndarray, p: int) -> np.ndarray:
         if p != len(self.anchors):

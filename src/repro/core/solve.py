@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["extraction_weights", "fit_coefficients", "condition_number"]
+__all__ = ["extraction_weights", "extraction_weights_batch",
+           "fit_coefficients", "condition_number"]
 
 
 def extraction_weights(V: np.ndarray, a: np.ndarray) -> np.ndarray:
@@ -36,6 +37,29 @@ def extraction_weights(V: np.ndarray, a: np.ndarray) -> np.ndarray:
         return np.linalg.solve(V.T, a)
     w, *_ = np.linalg.lstsq(V.T, a, rcond=None)
     return w
+
+
+def extraction_weights_batch(V: np.ndarray, a: np.ndarray) -> np.ndarray:
+    """Stacked :func:`extraction_weights` over a batch of fits.
+
+    ``V: (..., m, p)`` is a stack of (generalized) Vandermonde matrices —
+    one per Monte-Carlo trace — and ``a`` is either a shared functional
+    ``(p,)`` or a per-trace stack ``(..., p)``.  Returns ``w: (..., m)``
+    with ``w[t] @ d[t] == a @ c_fit[t]`` for every trace ``t``, using one
+    LAPACK-batched solve instead of a Python loop.  Per-trace results are
+    identical to the scalar path (the same factorization runs per matrix).
+    """
+    V = np.asarray(V)
+    *batch, m, p = V.shape
+    a = np.asarray(a, dtype=V.dtype)
+    if m < p:
+        raise ValueError(f"underdetermined fit: {m} evals for {p} coefficients")
+    Vt = np.swapaxes(V, -1, -2)                    # (..., p, m)
+    if m == p:
+        rhs = np.broadcast_to(a[..., :, None], tuple(batch) + (p, 1))
+        return np.linalg.solve(Vt, rhs)[..., 0]
+    # overdetermined: min-norm solution of V^T w = a via batched pinv
+    return np.einsum("...mp,...p->...m", np.linalg.pinv(Vt), a)
 
 
 def fit_coefficients(V: np.ndarray, d: np.ndarray) -> np.ndarray:

@@ -13,7 +13,8 @@ from dataclasses import dataclass
 import numpy as np
 
 __all__ = ["uniform_order", "shifted_exp_times", "order_from_times",
-           "CompletionTrace", "simulate_completion"]
+           "CompletionTrace", "simulate_completion",
+           "CompletionBatch", "simulate_completion_batch"]
 
 
 def uniform_order(rng: np.random.Generator, N: int) -> np.ndarray:
@@ -76,4 +77,75 @@ def simulate_completion(rng: np.random.Generator, N: int, *,
     if model == "shifted_exp":
         t = shifted_exp_times(rng, N, **kw)
         return CompletionTrace(order=order_from_times(t), times=t)
+    raise ValueError(f"unknown completion model {model!r}")
+
+
+# --------------------------------------------------------------- batched API
+
+@dataclass
+class CompletionBatch:
+    """A stack of realized completion processes — one row per trace.
+
+    The batched Monte-Carlo engine (``repro.core.simulate.SimulationEngine``)
+    consumes whole batches at once instead of looping over
+    :class:`CompletionTrace` objects.
+    """
+
+    orders: np.ndarray          # (trials, N) worker index finishing m-th
+    times: np.ndarray | None    # (trials, N) per-worker times (or None)
+
+    @property
+    def trials(self) -> int:
+        return self.orders.shape[0]
+
+    @property
+    def N(self) -> int:
+        return self.orders.shape[1]
+
+    def trace(self, t: int) -> CompletionTrace:
+        """The t-th row as a legacy single-trace object."""
+        return CompletionTrace(order=self.orders[t],
+                               times=None if self.times is None
+                               else self.times[t])
+
+    @staticmethod
+    def from_traces(traces) -> "CompletionBatch":
+        traces = list(traces)
+        orders = np.stack([np.asarray(tr.order) for tr in traces])
+        times = None
+        if traces and traces[0].times is not None:
+            times = np.stack([np.asarray(tr.times) for tr in traces])
+        return CompletionBatch(orders=orders, times=times)
+
+
+def uniform_orders(rng: np.random.Generator, N: int, trials: int) -> np.ndarray:
+    """``(trials, N)`` independent uniform completion orders in one call."""
+    return rng.permuted(np.broadcast_to(np.arange(N), (trials, N)), axis=1)
+
+
+def shifted_exp_times_batch(rng: np.random.Generator, N: int, trials: int, *,
+                            shift: float = 1.0, rate: float = 1.0,
+                            straggler_frac: float = 0.0,
+                            straggler_slowdown: float = 5.0) -> np.ndarray:
+    """``(trials, N)`` stacked shifted-exponential completion times."""
+    t = shift + rng.exponential(1.0 / rate, size=(trials, N))
+    if straggler_frac > 0:
+        k = int(round(straggler_frac * N))
+        rows = np.repeat(np.arange(trials), k)
+        cols = np.concatenate([rng.choice(N, size=k, replace=False)
+                               for _ in range(trials)]) if k else rows[:0]
+        t[rows, cols] *= straggler_slowdown
+    return t
+
+
+def simulate_completion_batch(rng: np.random.Generator, N: int, trials: int, *,
+                              model: str = "uniform", **kw) -> CompletionBatch:
+    """Stacked traces ``(trials, N)`` in one generator call per model."""
+    if model == "uniform":
+        return CompletionBatch(orders=uniform_orders(rng, N, trials),
+                               times=None)
+    if model == "shifted_exp":
+        t = shifted_exp_times_batch(rng, N, trials, **kw)
+        return CompletionBatch(orders=np.argsort(t, axis=1, kind="stable"),
+                               times=t)
     raise ValueError(f"unknown completion model {model!r}")

@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_walk import analyze_hlo
 from repro.analysis.roofline import collective_wire_bytes, roofline_terms
-from repro.configs import SHAPES, cells, get_arch, get_shape
+from repro.configs import cells, get_arch, get_shape
 from repro.data.pipeline import make_batch_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm

@@ -6,7 +6,7 @@ chips with a leading "pod" axis (pure DP over DCN).
 """
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -14,11 +14,9 @@ __all__ = ["make_production_mesh", "make_local_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/examples."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

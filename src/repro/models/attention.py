@@ -13,6 +13,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import pvary, shard_map
 from .hints import axes_hint, batch_hint, get_model_info
 
 __all__ = ["blockwise_attention", "decode_attention", "KVCache"]
@@ -88,8 +89,6 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def _smap_attention(q, k, v, mesh, *, causal, window, q_offset, bkv):
     """Flash attention under shard_map: (batch → data axes, q-chunks →
     model axis); KV replicated over model inside the body."""
-    import functools
-
     from jax.sharding import PartitionSpec as P
 
     B, H, Lq, d = q.shape
@@ -135,10 +134,10 @@ def _smap_attention(q, k, v, mesh, *, causal, window, q_offset, bkv):
                                    kv_len=Lkv), None
 
             axes = tuple(mesh.axis_names)
-            m0 = jax.lax.pvary(jnp.full((Bl, H, bq, 1), NEG_INF,
+            m0 = pvary(jnp.full((Bl, H, bq, 1), NEG_INF,
                                         jnp.float32), axes)
-            l0 = jax.lax.pvary(jnp.zeros((Bl, H, bq, 1), jnp.float32), axes)
-            a0 = jax.lax.pvary(jnp.zeros((Bl, H, bq, d), jnp.float32), axes)
+            l0 = pvary(jnp.zeros((Bl, H, bq, 1), jnp.float32), axes)
+            a0 = pvary(jnp.zeros((Bl, H, bq, d), jnp.float32), axes)
             (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
                                           jnp.arange(nkv))
             outs.append((acc / jnp.where(l == 0.0, 1.0, l)).astype(q.dtype))
@@ -146,7 +145,7 @@ def _smap_attention(q, k, v, mesh, *, causal, window, q_offset, bkv):
 
     win_arr = window if isinstance(window, jax.Array) else \
         jnp.asarray(window if window else 0, jnp.int32)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, "model", None, None),
                   P(bspec, None, None, None),

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .layers import init_dense
 
 __all__ = ["init_moe_params", "moe_block", "moe_ref", "router_aux_loss"]
@@ -196,7 +197,7 @@ def moe_block(p: dict, x: jax.Array, cfg):
         aux = jax.lax.pmean(aux, baxes) if baxes else aux
         return out, aux
 
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = shard_map(body, mesh=mesh,
                        in_specs=(P(tok_spec, None), w_specs),
                        out_specs=(P(tok_spec, None), P()))
     return fn(x, p)

@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ..models import lm
 from ..optim.adamw import (adamw_update, clip_by_global_norm, cosine_schedule,

@@ -1,0 +1,201 @@
+"""Batched Monte-Carlo engine: equivalence with the legacy per-trial path.
+
+The acceptance bar: the engine reproduces ``run_trace`` / ``average_curves``
+to ≤1e-10 *relative* error on every curve entry, for MatDot, OrthoMatDot,
+LayerSAC and GroupSAC, across both completion models.  Entries at the f64
+noise floor (normalized error below 1e-15 — exact-recovery residuals whose
+value is itself rounding noise) are compared absolutely; everything above it
+must match relatively.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CompletionBatch, GroupSACCode, LayerSACCode,
+                        MatDotCode, OrthoMatDotCode, ProblemContext,
+                        SimulationEngine, average_curves,
+                        average_curves_reference, extraction_weights,
+                        extraction_weights_batch, run_trace,
+                        run_trace_reference, simulate_completion,
+                        simulate_completion_batch, x_complex)
+
+K, N = 4, 12
+RTOL, ATOL = 1e-10, 1e-15
+
+
+def _problem(seed=2):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((40, 320)), rng.standard_normal((320, 30))
+
+
+def _factories():
+    return {
+        "matdot": lambda r: MatDotCode(K, N, x_complex(N, 0.1)),
+        "orthomatdot": lambda r: OrthoMatDotCode(K, N),
+        "layer_sac": lambda r: LayerSACCode(K, N, base="ortho", eps=1e-2),
+        "group_sac": lambda r: GroupSACCode(K, N, x_complex(N, 0.1), [2, 2],
+                                            rng=r),
+    }
+
+
+def _assert_curves_equal(ref, eng, rtol=RTOL, atol=ATOL):
+    for attr in ("total", "approx", "comp"):
+        r, e = getattr(ref, attr), getattr(eng, attr)
+        assert np.array_equal(np.isnan(r), np.isnan(e)), attr
+        ok = ~np.isnan(r)
+        np.testing.assert_allclose(e[ok], r[ok], rtol=rtol, atol=atol,
+                                   err_msg=attr)
+
+
+# ------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("name", ["matdot", "orthomatdot", "layer_sac",
+                                  "group_sac"])
+@pytest.mark.parametrize("model", ["uniform", "shifted_exp"])
+def test_average_curves_matches_reference(name, model):
+    A, B = _problem()
+    factory = _factories()[name]
+    ref = average_curves_reference(factory, A, B, trials=10, seed=3,
+                                   completion_model=model)
+    eng = average_curves(factory, A, B, trials=10, seed=3,
+                         completion_model=model)
+    _assert_curves_equal(ref, eng)
+
+
+@pytest.mark.parametrize("name", ["matdot", "orthomatdot", "layer_sac",
+                                  "group_sac"])
+def test_run_trace_matches_reference(name):
+    A, B = _problem()
+    rng = np.random.default_rng(7)
+    code = _factories()[name](rng)
+    for _ in range(3):
+        trace = simulate_completion(rng, code.N)
+        ref = run_trace_reference(code, A, B, trace)
+        eng = run_trace(code, A, B, trace)
+        _assert_curves_equal(ref, eng)
+
+
+def test_oracle_beta_and_ms_subset_equivalence():
+    A, B = _problem()
+    factory = _factories()["group_sac"]
+    ref = average_curves_reference(factory, A, B, trials=6, seed=5,
+                                   beta_mode="oracle", ms=[2, 5, 7])
+    eng = average_curves(factory, A, B, trials=6, seed=5,
+                         beta_mode="oracle", ms=[2, 5, 7])
+    _assert_curves_equal(ref, eng)
+
+
+@pytest.mark.parametrize("products", ["direct", "cross"])
+def test_products_modes_match_reference(products):
+    A, B = _problem()
+    factory = _factories()["group_sac"]
+    ref = average_curves_reference(factory, A, B, trials=8, seed=11)
+    eng = average_curves(factory, A, B, trials=8, seed=11, products=products)
+    _assert_curves_equal(ref, eng)
+
+
+# ------------------------------------------------------------- gram norms
+
+def test_gram_norms_match_above_noise_floor():
+    A, B = _problem()
+    rng = np.random.default_rng(9)
+    code = LayerSACCode(K, N, base="ortho", eps=1e-2)
+    batch = simulate_completion_batch(rng, N, 16)
+    exact = SimulationEngine(code, A, B).run_batch(batch)
+    gram = SimulationEngine(code, A, B, norms="gram").run_batch(batch)
+    for attr in ("total", "approx", "comp"):
+        r, e = getattr(exact, attr), getattr(gram, attr)
+        assert np.array_equal(np.isnan(r), np.isnan(e))
+        ok = ~np.isnan(r) & (np.abs(r) > 1e-8)      # above the gram floor
+        np.testing.assert_allclose(e[ok], r[ok], rtol=1e-7, err_msg=attr)
+
+
+# ------------------------------------------------------------- jax backend
+
+def test_jax_backend_agrees_with_numpy():
+    A, B = _problem()
+    rng = np.random.default_rng(4)
+    batch = simulate_completion_batch(rng, N, 6)
+    for code in (LayerSACCode(K, N, base="ortho", eps=1e-2),
+                 GroupSACCode(K, N, x_complex(N, 0.1), [2, 2])):
+        c_np = SimulationEngine(code, A, B).run_batch(batch)
+        c_jx = SimulationEngine(code, A, B, backend="jax").run_batch(batch)
+        for attr in ("total", "approx", "comp"):
+            r, e = getattr(c_np, attr), getattr(c_jx, attr)
+            assert np.array_equal(np.isnan(r), np.isnan(e))
+            ok = ~np.isnan(r)
+            # scoped-x64 jax path: f64 fidelity, only summation order differs
+            np.testing.assert_allclose(e[ok], r[ok], rtol=1e-8, atol=1e-14,
+                                       err_msg=f"{code.name}/{attr}")
+
+
+def test_jax_backend_leaves_global_precision_alone():
+    import jax
+    import jax.numpy as jnp
+    before = bool(jax.config.jax_enable_x64)
+    A, B = _problem()
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(0)
+    SimulationEngine(code, A, B, backend="jax").run_batch(
+        simulate_completion_batch(rng, N, 2))
+    assert bool(jax.config.jax_enable_x64) == before
+    if not before:
+        assert jnp.asarray(np.float64(1.0)).dtype == jnp.float32
+
+
+# -------------------------------------------------------- batched plumbing
+
+def test_simulate_completion_batch_shapes_and_validity():
+    rng = np.random.default_rng(1)
+    b = simulate_completion_batch(rng, 9, 5)
+    assert b.orders.shape == (5, 9) and b.times is None
+    for row in b.orders:
+        assert sorted(row) == list(range(9))
+    b = simulate_completion_batch(rng, 9, 5, model="shifted_exp",
+                                  straggler_frac=0.3)
+    assert b.times.shape == (5, 9)
+    for row, t in zip(b.orders, b.times):
+        assert np.array_equal(row, np.argsort(t, kind="stable"))
+    tr = b.trace(2)
+    assert np.array_equal(tr.order, b.orders[2])
+    rt = CompletionBatch.from_traces([b.trace(i) for i in range(5)])
+    assert np.array_equal(rt.orders, b.orders)
+    assert np.array_equal(rt.times, b.times)
+
+
+def test_extraction_weights_batch_matches_scalar():
+    rng = np.random.default_rng(6)
+    for m, p in [(7, 7), (9, 6)]:
+        V = rng.standard_normal((5, m, p)) + 1j * rng.standard_normal((5, m, p))
+        a = rng.standard_normal(p)
+        W = extraction_weights_batch(V, a)
+        for t in range(5):
+            np.testing.assert_allclose(W[t], extraction_weights(V[t], a),
+                                       rtol=1e-9, atol=1e-12)
+
+
+def test_problem_context_reuse():
+    A, B = _problem()
+    ctx = ProblemContext.build(A, B, K)
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(8)
+    batch = simulate_completion_batch(rng, N, 4)
+    with_ctx = SimulationEngine(code, A, B, problem=ctx).run_batch(batch)
+    without = SimulationEngine(code, A, B).run_batch(batch)
+    _assert_curves_equal(without, with_ctx)
+    cross = ctx.cross_products()
+    np.testing.assert_allclose(
+        np.einsum("kkij->kij", cross), ctx.block_products, rtol=1e-12)
+
+
+def test_run_trace_full_length_and_thresholds():
+    A, B = _problem()
+    code = LayerSACCode(K, N, base="ortho", eps=1e-2)
+    rng = np.random.default_rng(3)
+    cur = run_trace(code, A, B, simulate_completion(rng, N))
+    assert cur.ms.shape == (N,) and cur.total.shape == (N,)
+    assert not np.isnan(cur.total).any()            # L-SAC estimates from m=1
+    code2 = MatDotCode(K, N, x_complex(N, 0.1))
+    cur2 = run_trace(code2, A, B, simulate_completion(rng, N))
+    R = code2.recovery_threshold
+    assert np.isnan(cur2.total[:R - 1]).all()
+    assert not np.isnan(cur2.total[R - 1:]).any()

@@ -7,11 +7,14 @@ contamination.  We verify it *symbolically*: treat each pair product
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' test extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings                          # noqa: E402
+from hypothesis import strategies as st                         # noqa: E402
 
 from repro.core import GroupSACCode, group_thresholds, x_complex
-from repro.core.codes.base import DecodeInfo
 
 
 def symbolic_coefficient_pairs(code, degree):

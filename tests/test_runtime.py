@@ -104,8 +104,8 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
     from repro.runtime.coded import (distributed_coded_matmul,
                                      decode_weight_vector, encode_operands)
     from repro.core.partition import split_contraction
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     K, N = 3, 8
     A = rng.standard_normal((16, 48)); B = rng.standard_normal((48, 12))

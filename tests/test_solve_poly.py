@@ -1,8 +1,12 @@
 """Decode linear algebra + polynomial bases: unit & property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' test extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings                          # noqa: E402
+from hypothesis import strategies as st                         # noqa: E402
 
 from repro.core import chebyshev_roots, extraction_weights, fit_coefficients
 from repro.core.poly import (ChebyshevBasis, MonomialBasis, chebyshev_T,
