@@ -30,9 +30,10 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_BENCH_NZ", "2000")
     # import AFTER the env is set: common.py reads it at import time
     from . import (common, engine_speedup, fig2_error_sources, fig3a_tradeoff,
-                   fig3b_correlation, kernel_bench, table1_thresholds)
+                   fig3b_correlation, kernel_bench, serve_throughput,
+                   table1_thresholds)
     mods = [table1_thresholds, fig3a_tradeoff, fig2_error_sources,
-            fig3b_correlation, engine_speedup, kernel_bench]
+            fig3b_correlation, engine_speedup, serve_throughput, kernel_bench]
     if args.only:
         wanted = set(args.only.split(","))
         mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in wanted]

@@ -1,0 +1,189 @@
+"""Serving-runtime benchmark: streaming incremental decode vs per-tick
+recompute.
+
+Workload = the default serve configuration (K=8, N=24, 15% persistent
+stragglers, shifted-exponential latencies) served in streaming mode: an
+answer at every worker-completion event plus a fine deadline grid
+(t = 1.0 .. 3.0 step 0.1 — clients polling the refining estimate).  Three
+measurements:
+
+* **per-tick decode cost** — for each serving code, the wall-clock of the
+  decode path alone (products precomputed) over the full event + tick
+  stream: :class:`RecomputeDecoder` (the legacy from-scratch
+  ``code.decode`` per tick) vs :class:`IncrementalDecoder` (rank-1 cluster
+  updates, frozen-regime reuse, decode-weight LRU).  The acceptance gate —
+  aggregate ≥ 5× across the default workload — is asserted at the full
+  request count (CI quick mode emits without the timing assert).
+* **requests/sec** — end-to-end :class:`MasterScheduler` wall-clock, both
+  decoder modes (includes encode + worker products, so the gap narrows).
+* **time-to-first-answer** — streaming emits at the first-threshold
+  completion event; the legacy 5-deadline grid waits for the next tick.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
+                        x_complex)
+from repro.core.straggler import shifted_exp_times
+from repro.serving import (DecodeWeightCache, MasterScheduler, ServeConfig,
+                           SimulatedBackend, make_decoder,
+                           merged_event_stream)
+
+from .common import TRIALS, emit, save_rows
+
+REQUESTS = int(os.environ.get("REPRO_BENCH_SERVE_REQUESTS",
+                              "8" if TRIALS >= 50 else "4"))
+ROWS, INNER = 100, 800
+K, N = 8, 24
+STRAGGLER_FRAC = 0.15
+DEADLINES = tuple(np.round(np.arange(1.0, 3.01, 0.1), 2))
+
+
+def serving_codes():
+    return {
+        "gsac_k1_5": GroupSACCode(K, N, x_complex(N, 0.1), [5, K - 5]),
+        "eps_matdot": EpsApproxMatDotCode(K, N, x_complex(N, 0.1)),
+        "lsac_ortho": LayerSACCode(K, N, base="ortho", eps=6.25e-3),
+    }
+
+
+def decode_pass(decoder, order, products, stream):
+    """Drive one request's full answer stream through one decoder."""
+    n_ticks = 0
+    for _, kind, i in stream:
+        if kind == 0:
+            w = int(order[i])
+            decoder.push(w, products[w])
+        decoder.estimate()
+        n_ticks += 1
+    return n_ticks
+
+
+def bench_decode_cost():
+    """Per-tick decode cost: recompute baseline vs incremental."""
+    rng = np.random.default_rng(11)
+    A = rng.standard_normal((ROWS, INNER))
+    B = rng.standard_normal((INNER, ROWS))
+    rows = []
+    t_base_total = t_inc_total = 0.0
+    for name, code in serving_codes().items():
+        products = code.run_workers(A, B)
+        traces = []
+        for _ in range(REQUESTS):
+            times = shifted_exp_times(rng, N, straggler_frac=STRAGGLER_FRAC)
+            order = np.argsort(times, kind="stable")
+            traces.append((order,
+                           merged_event_stream(np.sort(times), DEADLINES)))
+        # equivalence spot-check before timing: same answer stream (its own
+        # throwaway cache — it must not pre-warm the timed pass)
+        d_inc = make_decoder("incremental", code,
+                             cache=DecodeWeightCache(1024))
+        d_base = make_decoder("recompute", code)
+        order, stream = traces[0]
+        for _, kind, i in stream:
+            if kind == 0:
+                w = int(order[i])
+                d_inc.push(w, products[w])
+                d_base.push(w, products[w])
+            ei, eb = d_inc.estimate(), d_base.estimate()
+            assert (ei is None) == (eb is None)
+            if eb is not None:
+                dev = np.linalg.norm(ei - eb) / max(np.linalg.norm(eb),
+                                                    1e-300)
+                assert dev <= 1e-9, f"{name}: incremental deviates {dev:.2e}"
+
+        t0 = time.perf_counter()
+        ticks = 0
+        for order, stream in traces:
+            ticks += decode_pass(make_decoder("recompute", code),
+                                 order, products, stream)
+        t_base = time.perf_counter() - t0
+        cache = DecodeWeightCache(1024)           # service-wide, as deployed
+        t0 = time.perf_counter()
+        for order, stream in traces:
+            decode_pass(make_decoder("incremental", code, cache=cache),
+                        order, products, stream)
+        t_inc = time.perf_counter() - t0
+        t_base_total += t_base
+        t_inc_total += t_inc
+        speedup = t_base / t_inc
+        us_base = t_base * 1e6 / ticks
+        us_inc = t_inc * 1e6 / ticks
+        rows.append((name, f"{us_base:.1f}", f"{us_inc:.1f}",
+                     f"{speedup:.2f}", cache.hits, cache.misses))
+        emit(f"serve_throughput/decode_{name}", us_inc,
+             f"speedup={speedup:.1f}x;us_per_tick_base={us_base:.1f}")
+    total = t_base_total / t_inc_total
+    emit("serve_throughput/decode_total",
+         t_inc_total * 1e6 / max(REQUESTS, 1),
+         f"speedup={total:.1f}x;requests={REQUESTS}")
+    rows.append(("TOTAL", f"{t_base_total:.4f}s", f"{t_inc_total:.4f}s",
+                 f"{total:.2f}", "", ""))
+    save_rows("serve_throughput.csv",
+              "code,us_per_tick_recompute,us_per_tick_incremental,"
+              "speedup,cache_hits,cache_misses", rows)
+    if REQUESTS >= 8:
+        assert total >= 5.0, \
+            f"incremental decode speedup {total:.1f}x below the 5x gate"
+    return total
+
+
+def bench_scheduler():
+    """End-to-end requests/sec + time-to-first-answer, both decoder modes."""
+    code = serving_codes()["gsac_k1_5"]
+    rng = np.random.default_rng(17)
+    reqs = [(rng.standard_normal((ROWS, INNER)),
+             rng.standard_normal((INNER, ROWS))) for _ in range(REQUESTS)]
+    out = {}
+    for mode in ("incremental", "recompute"):
+        # track_errors off: a real service never computes the uncoded A@B
+        # reference, and the per-answer norms would drown the decode cost
+        cfg = ServeConfig(deadlines=DEADLINES, stream=True, batch_size=4,
+                          decoder=mode, seed=2, track_errors=False)
+        sched = MasterScheduler(
+            code, SimulatedBackend(straggler_frac=STRAGGLER_FRAC), cfg)
+        for A, B in reqs:
+            sched.submit(A, B)
+        t0 = time.perf_counter()
+        results = sched.run()
+        wall = time.perf_counter() - t0
+        rps = len(results) / wall
+        ttfa = float(np.mean([r.ttfa for r in results
+                              if r.ttfa is not None]))
+        out[mode] = (rps, wall)
+        emit(f"serve_throughput/rps_{mode}", wall * 1e6 / len(results),
+             f"req_per_sec={rps:.2f};mean_ttfa={ttfa:.3f}")
+    # legacy tick grid for the TTFA comparison (answers only at deadlines)
+    cfg = ServeConfig(deadlines=(1.1, 1.3, 1.6, 2.0, 3.0), stream=False,
+                      batch_size=4, seed=2, track_errors=False)
+    sched = MasterScheduler(
+        code, SimulatedBackend(straggler_frac=STRAGGLER_FRAC), cfg)
+    for A, B in reqs:
+        sched.submit(A, B)
+    results = sched.run()
+    first = code.first_threshold
+    ttfa_grid = float(np.mean(
+        [next((a.t for a in r.answers if a.m >= first), np.nan)
+         for r in results]))
+    ttfa_stream = float(np.mean([r.ttfa for r in results
+                                 if r.ttfa is not None]))
+    emit("serve_throughput/ttfa", ttfa_stream * 1e6,
+         f"stream={ttfa_stream:.3f};deadline_grid={ttfa_grid:.3f}")
+    return out
+
+
+def main():
+    total = bench_decode_cost()
+    out = bench_scheduler()
+    gain = out["incremental"][0] / out["recompute"][0]
+    emit("serve_throughput/e2e_gain", out["incremental"][1] * 1e6 / REQUESTS,
+         f"rps_gain={gain:.2f}x;decode_speedup={total:.1f}x")
+    return total
+
+
+if __name__ == "__main__":
+    main()

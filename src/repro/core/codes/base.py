@@ -182,6 +182,47 @@ class CDCCode:
             return np.ones(1)
         return None
 
+    # ------------------------------------------------- streaming-decode hooks
+    def decode_support(self, m: int) -> int:
+        """Completions the decode at state ``m`` actually reads.
+
+        The estimate at ``m`` is a function of the first ``decode_support(m)``
+        completions only (``= min(m, R)`` for plain polynomial fits; K for
+        ε-approximate MatDot's frozen layer).  The serving runtime keys its
+        decode-weight cache on exactly this prefix.
+        """
+        return min(m, self.recovery_threshold)
+
+    def decode_update(self, m: int) -> str:
+        """How the serving estimate changes when completion ``m`` arrives.
+
+        * ``"none"``    — estimate identical to state ``m-1`` (below the first
+          threshold, past the recovery threshold, or a frozen layer whose
+          weights ignore the new arrival).
+        * ``"rank1"``   — a structured O(1) update exists (cluster-mean codes:
+          the new product enters one cluster average; everything else is a
+          scalar rescale).  Codes returning this must also implement
+          :meth:`cluster_structure`.
+        * ``"resolve"`` — the extraction weights must be re-solved (a
+          resolution-layer boundary).
+
+        The incremental serving decoder (``repro.serving``) dispatches on
+        this; the default is a full re-solve at every state in
+        ``[first_threshold, R]`` and no work outside it.
+        """
+        if m < self.first_threshold or m > self.recovery_threshold:
+            return "none"
+        return "resolve"
+
+    def cluster_structure(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """``(cluster, alphas)`` for cluster-mean codes, else ``None``.
+
+        ``cluster[n]`` is worker n's anchor index and the pre-β estimate is
+        ``Σ_k alphas[k] · mean{P_n : n ∈ cluster k, n completed}`` — the form
+        that admits O(1) per-completion ("rank-1") updates.
+        """
+        return None
+
     # ------------------------------------------------------------- identity
     def cache_key(self) -> tuple:
         """Hashable decode identity: trials whose codes share a key produce

@@ -98,8 +98,21 @@ class LayerSACCode(CDCCode):
     def first_threshold(self) -> int:
         return 1                                   # R_{L-SAC,1} = 1
 
+    def decode_update(self, m: int) -> str:
+        R = self.recovery_threshold
+        if m > R:
+            return "none"
+        if m == R:
+            return "resolve"
+        return "rank1"          # eq. (2): one product enters one cluster mean
+
+    def cluster_structure(self):
+        return self.cluster, self.alphas
+
     # ---------------------------------------------------------------- decode
     def estimate_weights(self, completed: np.ndarray, m: int):
+        if m < 1:                    # below R_{L-SAC,1}: no completions, no
+            return None              # estimate (not an empty weighted sum)
         R = self.recovery_threshold
         if m >= R:
             xs = self.eval_points[completed][:R]
@@ -124,6 +137,8 @@ class LayerSACCode(CDCCode):
         return counts
 
     def estimate_weights_batch(self, orders: np.ndarray, m: int):
+        if m < 1:
+            return None
         orders = np.asarray(orders)
         if m >= self.recovery_threshold:
             return self._point_decode_batch(orders)

@@ -96,6 +96,19 @@ class EpsApproxMatDotCode(MatDotCode):
     def n_layers(self) -> int:
         return 1                 # single resolution layer [20]
 
+    def decode_support(self, m: int) -> int:
+        # the single approximate layer reads only the first K completions
+        if m < self.recovery_threshold:
+            return min(m, self.K)
+        return self.recovery_threshold
+
+    def decode_update(self, m: int) -> str:
+        # weights change only when the layer appears (m = K) and at exact
+        # recovery (m = R); in between the estimate is frozen ([20], Fig. 3a)
+        if m == self.K or m == self.recovery_threshold:
+            return "resolve"
+        return "none"
+
     def estimate_weights(self, completed: np.ndarray, m: int):
         K, R = self.K, self.recovery_threshold
         if m < K:

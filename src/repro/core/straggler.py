@@ -64,7 +64,15 @@ class CompletionTrace:
         return out
 
     def time_of(self, m: int) -> float:
-        """Wall-clock time at which the m-th completion happens."""
+        """Wall-clock time at which the m-th completion happens.
+
+        ``m = 0`` (no completions yet) is the dispatch instant, 0.0 — NOT
+        ``times[-1]``, which the old ``[m - 1]`` indexing silently returned.
+        """
+        if m < 0 or m > self.N:
+            raise ValueError(f"m={m} outside [0, N={self.N}]")
+        if m == 0:
+            return 0.0
         if self.times is None:
             return float(m)
         return float(np.sort(self.times)[m - 1])

@@ -1,64 +1,123 @@
-"""Serving driver: the paper's coded-matmul service with batched requests.
+"""Serving CLI — thin front-end over :mod:`repro.serving`.
 
 A master accepts matmul jobs (the paper's C = A·B workload), encodes them
-with a selected SAC code, fans the encoded products out to N (simulated)
-workers with shifted-exponential latencies, and answers with **successive
-refinement**: at each deadline tick it decodes the best available estimate
-from whoever has finished.  Exact once 2K-1 report in; straggler-proof by
-construction.  This is the paper-kind end-to-end driver (deliverable b).
+with a selected SAC code, fans the encoded products out to N workers with
+shifted-exponential latencies, and answers with **successive refinement**
+through the streaming runtime: an event-driven loop pushes each completion
+into an incremental decoder (O(1) per event; decode-weight LRU across
+requests) and emits estimates at deadline ticks — or at every completion
+with ``--stream``.  Exact once 2K-1 report in; straggler-proof by
+construction.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --code gsac_k1_5 --requests 8
     PYTHONPATH=src python -m repro.launch.serve --code lsac_ortho \
-        --straggler-frac 0.2 --deadlines 0.4,0.7,1.0,1.5
+        --straggler-frac 0.2 --deadlines 0.4,0.7,1.0,1.5 --stream
+    PYTHONPATH=src python -m repro.launch.serve --code gsac_auto --K 4 \
+        --N 12 --backend device
 """
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
 from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
-                        MatDotCode, simulate_completion, split_contraction,
-                        x_complex)
+                        MatDotCode, x_complex)
+from repro.serving import (DecodeWeightCache, MasterScheduler, ServeConfig,
+                           make_backend, serve_request)
 
-CODES = {
-    "matdot": lambda K, N: MatDotCode(K, N, x_complex(N, 0.1)),
-    "eps_matdot": lambda K, N: EpsApproxMatDotCode(K, N, x_complex(N, 0.1)),
-    "gsac_k1_5": lambda K, N: GroupSACCode(K, N, x_complex(N, 0.1),
-                                           [5, K - 5]),
-    "lsac_ortho": lambda K, N: LayerSACCode(K, N, base="ortho", eps=6.25e-3),
-    "lsac_lagrange": lambda K, N: LayerSACCode(K, N, base="lagrange",
-                                               eps=3.33e-2),
-}
+__all__ = ["CODES", "build_code", "validate_args", "serve_request", "main"]
 
 
-def serve_request(code, A, B, rng, *, deadlines, straggler_frac=0.0,
-                  beta_mode="one"):
-    """One job: returns [(deadline, m_done, rel_err or None), ...]."""
-    C = A @ B
-    norm = np.linalg.norm(C) ** 2
-    products = code.run_workers(A, B)
-    trace = simulate_completion(rng, code.N, model="shifted_exp",
-                                straggler_frac=straggler_frac)
-    A_blocks, B_blocks = split_contraction(A, B, code.K)
-    oracle = code.oracle_context(A_blocks, B_blocks)
-    times = np.sort(trace.times)
+def _auto_groups(K: int) -> list[int]:
+    """Two-group split derived from K (single group when K = 1)."""
+    if K <= 1:
+        return [K]
+    a = (K + 1) // 2
+    return [a, K - a]
+
+
+@dataclass
+class CodeSpec:
+    build: Callable
+    # returns a list of human-actionable problems for (K, N); empty = ok
+    check: Callable
+
+
+def _check_matdot_family(K: int, N: int) -> list[str]:
     out = []
-    for dl in deadlines:
-        m = int(np.searchsorted(times, dl, side="right"))
-        est = code.decode(products, trace.order, m, beta_mode, oracle) \
-            if m >= 1 else None
-        err = (float(np.linalg.norm(est - C) ** 2 / norm)
-               if est is not None else None)
-        out.append((dl, m, err))
+    if N < 2 * K - 1:
+        out.append(f"needs N >= 2K-1 = {2 * K - 1} workers for exact "
+                   f"recovery; got --N {N} (raise --N or lower --K)")
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def _check_gsac_k1_5(K: int, N: int) -> list[str]:
+    if K <= 5:
+        return [f"builds group sizes [5, K-5], so it needs --K >= 6; got "
+                f"--K {K}.  Use --code gsac_auto (group sizes derived from "
+                "K) or raise --K"]
+    return _check_matdot_family(K, N)
+
+
+def _check_lsac(K: int, N: int) -> list[str]:
+    out = _check_matdot_family(K, N)
+    if N % K != 0:
+        out.append(f"clusters the N workers evenly over K anchors, so it "
+                   f"needs K | N; got --K {K}, --N {N} (pick N a multiple "
+                   "of K)")
+    return out
+
+
+CODES = {
+    "matdot": CodeSpec(
+        lambda K, N: MatDotCode(K, N, x_complex(N, 0.1)),
+        _check_matdot_family),
+    "eps_matdot": CodeSpec(
+        lambda K, N: EpsApproxMatDotCode(K, N, x_complex(N, 0.1)),
+        _check_matdot_family),
+    "gsac_k1_5": CodeSpec(
+        lambda K, N: GroupSACCode(K, N, x_complex(N, 0.1), [5, K - 5]),
+        _check_gsac_k1_5),
+    "gsac_auto": CodeSpec(
+        lambda K, N: GroupSACCode(K, N, x_complex(N, 0.1), _auto_groups(K)),
+        _check_matdot_family),
+    "lsac_ortho": CodeSpec(
+        lambda K, N: LayerSACCode(K, N, base="ortho", eps=6.25e-3),
+        _check_lsac),
+    "lsac_lagrange": CodeSpec(
+        lambda K, N: LayerSACCode(K, N, base="lagrange", eps=3.33e-2),
+        _check_lsac),
+}
+
+
+def validate_args(code: str, K: int, N: int) -> list[str]:
+    """Actionable problems with a CLI configuration (empty list = valid)."""
+    if code not in CODES:
+        return [f"unknown --code {code!r}; known: {sorted(CODES)}"]
+    out = []
+    if K < 1 or N < 1:
+        out.append(f"need --K >= 1 and --N >= 1; got --K {K}, --N {N}")
+    out.extend(f"--code {code} {p}" for p in CODES[code].check(K, N))
+    return out
+
+
+def build_code(code: str, K: int, N: int):
+    """Build a CLI code, raising ``SystemExit`` with actionable messages."""
+    problems = validate_args(code, K, N)
+    if problems:
+        raise SystemExit("[serve] invalid arguments:\n  " +
+                         "\n  ".join(problems))
+    return CODES[code].build(K, N)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--code", default="gsac_k1_5", choices=sorted(CODES))
     ap.add_argument("--K", type=int, default=8)
     ap.add_argument("--N", type=int, default=24)
@@ -69,35 +128,87 @@ def main():
     ap.add_argument("--straggler-frac", type=float, default=0.15)
     ap.add_argument("--beta", default="one")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--stream", action="store_true",
+                    help="emit an answer at every completion event")
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="requests encoded/dispatched together")
+    ap.add_argument("--decoder", default="incremental",
+                    choices=("incremental", "recompute"),
+                    help="streaming decoder or the per-tick re-decode "
+                    "baseline")
+    ap.add_argument("--backend", default="sim", choices=("sim", "device"),
+                    help="simulated numpy workers or the jax device kernels")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="decode-weight LRU entries (0 disables)")
+    args = ap.parse_args(argv)
+
+    if args.inner % args.K != 0:
+        raise SystemExit(f"[serve] invalid arguments:\n  --inner "
+                         f"{args.inner} must be divisible by --K {args.K} "
+                         "(the contraction dim splits into K blocks)")
+    if args.batch_size < 1:
+        raise SystemExit(f"[serve] invalid arguments:\n  --batch-size must "
+                         f"be >= 1; got {args.batch_size}")
+    code = build_code(args.code, args.K, args.N)
+    deadlines = tuple(float(x) for x in args.deadlines.split(","))
+    backend = make_backend(args.backend,
+                           straggler_frac=args.straggler_frac)
+    cfg = ServeConfig(deadlines=deadlines, stream=args.stream,
+                      batch_size=args.batch_size, beta_mode=args.beta,
+                      decoder=args.decoder, seed=args.seed)
+    # the recompute baseline never consults the cache — don't create one,
+    # so the stats line only prints when caching is actually in play
+    cache = DecodeWeightCache(args.cache_size) \
+        if args.cache_size > 0 and args.decoder == "incremental" else None
+    sched = MasterScheduler(code, backend, cfg, cache)
 
     rng = np.random.default_rng(args.seed)
-    code = CODES[args.code](args.K, args.N)
-    deadlines = [float(x) for x in args.deadlines.split(",")]
     print(f"[serve] code={args.code} K={args.K} N={args.N} "
           f"R={code.recovery_threshold} first={code.first_threshold} "
-          f"straggler_frac={args.straggler_frac}")
-    agg = {dl: [] for dl in deadlines}
-    t0 = time.time()
-    for r in range(args.requests):
+          f"straggler_frac={args.straggler_frac} decoder={args.decoder} "
+          f"backend={args.backend} batch={args.batch_size}")
+    for _ in range(args.requests):
         A = rng.standard_normal((args.rows, args.inner))
         B = rng.standard_normal((args.inner, args.rows))
-        res = serve_request(code, A, B, rng, deadlines=deadlines,
-                            straggler_frac=args.straggler_frac,
-                            beta_mode=args.beta)
+        sched.submit(A, B)
+
+    t0 = time.time()
+    results = sched.run()
+    wall = time.time() - t0
+
+    agg = {dl: [] for dl in deadlines}
+    ttfa = []
+    for res in results:
+        ticks = [a for a in res.answers if a.kind == "deadline"]
         line = " | ".join(
-            f"t={dl:.1f}: m={m:2d} " +
-            (f"err={err:.2e}" if err is not None else "no-estimate")
-            for dl, m, err in res)
-        print(f"[serve] req {r}: {line}")
-        for dl, m, err in res:
-            if err is not None:
-                agg[dl].append(err)
-    print(f"[serve] {args.requests} requests in {time.time() - t0:.1f}s")
+            f"t={a.t:.1f}: m={a.m:2d} " +
+            (f"err={a.rel_err:.2e}" if a.rel_err is not None
+             else "no-estimate")
+            for a in ticks)
+        print(f"[serve] req {res.req_id}: {line}")
+        for a in ticks:
+            if a.rel_err is not None:
+                agg[a.t].append(a.rel_err)
+        # the time a client actually received the first estimate: the first
+        # emitted answer carrying one (in deadline mode that is the tick
+        # after the first-threshold completion, not the completion itself)
+        first = next((a.t for a in res.answers if a.rel_err is not None),
+                     None)
+        if first is not None:
+            ttfa.append(first)
+    rps = len(results) / max(wall, 1e-9)
+    first = f"; mean time-to-first-answer {np.mean(ttfa):.3f}" if ttfa else ""
+    print(f"[serve] {len(results)} requests in {wall:.2f}s "
+          f"({rps:.1f} req/s){first}")
     for dl in deadlines:
         if agg[dl]:
             print(f"[serve] deadline {dl:.1f}: mean rel err "
                   f"{np.mean(agg[dl]):.3e} over {len(agg[dl])} answers")
+    if cache is not None:
+        st = cache.stats()
+        print(f"[serve] decode-weight cache: {st['hits']} hits / "
+              f"{st['misses']} misses (hit rate {st['hit_rate']:.0%}, "
+              f"size {st['size']})")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,13 @@ def decode_weight_vector(code: CDCCode, order: np.ndarray, m: int,
 
     ``Σ_n w_n P_n`` is the (β-scaled) SAC estimate at resolution state m —
     the control-plane object the master broadcasts each deadline tick.
+
+    The job path (:func:`distributed_coded_matmul`) reduces in the *real*
+    worker-product dtype, so complex weights (X_complex evaluation points)
+    must not enter it — their imaginary part would be silently dropped by the
+    dtype cast.  We raise instead; complex codes go through the re/im pair
+    expansion (``worker_products_complex``, the paper's 4× real-multiply
+    cost) or the host-side :meth:`CDCCode.decode`.
     """
     completed = np.asarray(order)[:m]
     res = code.estimate_weights(completed, m)
@@ -57,6 +64,15 @@ def decode_weight_vector(code: CDCCode, order: np.ndarray, m: int,
     b = code.beta(info, m, beta_mode, oracle)
     full = np.zeros(code.N, dtype=np.result_type(w.dtype, np.float64))
     full[completed[:len(w)]] = b * w
+    if np.iscomplexobj(full):
+        if np.any(full.imag != 0.0):
+            raise ValueError(
+                f"{code.name}: complex decode weights cannot enter the real "
+                "job path (the runtime reduction would drop the imaginary "
+                "part).  Use a real-evaluation-point code, or split the job "
+                "into re/im worker products (worker_products_complex) and "
+                "decode host-side via code.decode.")
+        full = full.real
     return full
 
 

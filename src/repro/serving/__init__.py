@@ -1,0 +1,35 @@
+"""Streaming successive-refinement serving runtime.
+
+The paper's core promise — estimates that *improve* as each straggler
+reports in — served incrementally:
+
+* :class:`MasterScheduler` — request queue, multi-request batching, and an
+  event-driven completion loop over per-worker latencies.
+* :class:`IncrementalDecoder` — maintains the running estimate ``Σ w_n P_n``
+  with O(1) work per worker completion (rank-1 cluster updates between
+  resolution layers, a full re-solve only at layer boundaries) instead of
+  the legacy O(m·Nx·Ny) re-decode per deadline tick.
+* :class:`DecodeWeightCache` — service-wide LRU over
+  ``(code, completed-set, m, β-mode)`` so repeated straggler patterns skip
+  the Vandermonde solve.
+* :class:`SimulatedBackend` / :class:`DeviceBackend` — the execution seam:
+  shifted-exponential simulated workers, or real devices through the
+  coded-matmul kernel ops and ``runtime/coded.py``'s weighted-psum decode.
+
+``launch/serve.py`` and ``examples/coded_matmul_service.py`` are thin CLIs
+over this package; ``benchmarks/serve_throughput.py`` measures it against
+the per-deadline-recompute baseline.
+"""
+from .backends import (DeviceBackend, ExecutionBackend, SimulatedBackend,
+                       make_backend)
+from .cache import DecodeWeightCache
+from .incremental import IncrementalDecoder, RecomputeDecoder, make_decoder
+from .master import (Answer, MasterScheduler, MatmulRequest, RequestResult,
+                     ServeConfig, merged_event_stream, serve_request)
+
+__all__ = [
+    "ExecutionBackend", "SimulatedBackend", "DeviceBackend", "make_backend",
+    "DecodeWeightCache", "IncrementalDecoder", "RecomputeDecoder",
+    "make_decoder", "MasterScheduler", "MatmulRequest", "ServeConfig",
+    "Answer", "RequestResult", "serve_request", "merged_event_stream",
+]

@@ -1,0 +1,163 @@
+"""Execution backends: where the coded worker products actually run.
+
+The master scheduler is backend-agnostic — it hands a batch of requests to a
+backend and gets back the ``(B, N, Nx, Ny)`` product stack plus per-worker
+completion times for the event loop:
+
+* :class:`SimulatedBackend` — host numpy products + shifted-exponential
+  latencies (the paper's §V serving model, with optional persistent
+  stragglers).
+* :class:`DeviceBackend`   — products computed on the jax device via the
+  coded-matmul kernel ops (Pallas on TPU, jnp elsewhere); complex evaluation
+  points go through the re/im 4×-real-GEMM expansion so the device never
+  sees complex dtypes.  ``decode_on_mesh`` closes the loop end-to-end: the
+  current (real) decode-weight vector from the incremental decoder becomes
+  the weighted-psum reduction of ``runtime/coded.py``.
+
+Latencies stay a *model* on both backends — real clusters would report
+completions; here the seam is where those reports would plug in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.codes.base import CDCCode
+from ..core.partition import split_contraction
+from ..core.straggler import shifted_exp_times
+
+__all__ = ["ExecutionBackend", "SimulatedBackend", "DeviceBackend",
+           "make_backend"]
+
+
+class ExecutionBackend:
+    """Protocol: batched worker products + a completion-time source."""
+
+    name = "abstract"
+
+    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
+        """Products for a batch of requests — ``(B, N, Nx, Ny)``."""
+        raise NotImplementedError
+
+    def sample_latencies(self, rng: np.random.Generator,
+                         N: int) -> np.ndarray:
+        """Per-worker completion times for one dispatched batch."""
+        raise NotImplementedError
+
+    # shared host-side encode: one einsum over the stacked request blocks
+    @staticmethod
+    def _encode_batch(code: CDCCode, As, Bs):
+        """``(E_A: (B,N,Nx,bz), E_B: (B,N,bz,Ny))`` for the whole batch."""
+        blocks = [split_contraction(np.asarray(A), np.asarray(B), code.K)
+                  for A, B in zip(As, Bs)]
+        A_blocks = np.stack([ab for ab, _ in blocks])    # (B, K, Nx, bz)
+        B_blocks = np.stack([bb for _, bb in blocks])    # (B, K, bz, Ny)
+        G_A, G_B = code.generator()
+        E_A = np.einsum("nk,rkij->rnij", G_A, A_blocks)
+        E_B = np.einsum("nk,rkij->rnij", G_B, B_blocks)
+        return E_A, E_B
+
+
+class SimulatedBackend(ExecutionBackend):
+    """Host numpy products; shifted-exponential worker latencies (§V)."""
+
+    name = "sim"
+
+    def __init__(self, *, shift: float = 1.0, rate: float = 1.0,
+                 straggler_frac: float = 0.0,
+                 straggler_slowdown: float = 5.0):
+        self.latency_kw = {"shift": shift, "rate": rate,
+                           "straggler_frac": straggler_frac,
+                           "straggler_slowdown": straggler_slowdown}
+
+    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
+        E_A, E_B = self._encode_batch(code, As, Bs)
+        return np.einsum("rnij,rnjl->rnil", E_A, E_B)
+
+    def sample_latencies(self, rng: np.random.Generator,
+                         N: int) -> np.ndarray:
+        return shifted_exp_times(rng, N, **self.latency_kw)
+
+
+class DeviceBackend(ExecutionBackend):
+    """Products on the jax device via the coded-matmul kernel ops.
+
+    The batch and worker axes fold into the kernel's single worker dim
+    (``(B·N, Nx, bz) @ (B·N, bz, Ny)``) so one launch covers the whole batch.
+    Latencies reuse the simulated model (see module docstring).
+    """
+
+    name = "device"
+
+    def __init__(self, *, use_pallas: bool | None = None,
+                 dtype=None, shift: float = 1.0, rate: float = 1.0,
+                 straggler_frac: float = 0.0,
+                 straggler_slowdown: float = 5.0):
+        import jax.numpy as jnp
+        self.use_pallas = use_pallas
+        self.dtype = jnp.float32 if dtype is None else dtype
+        self.latency_kw = {"shift": shift, "rate": rate,
+                           "straggler_frac": straggler_frac,
+                           "straggler_slowdown": straggler_slowdown}
+
+    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from ..kernels.coded_matmul.ops import (worker_products,
+                                                worker_products_complex)
+        E_A, E_B = self._encode_batch(code, As, Bs)
+        B, N = E_A.shape[:2]
+        ea = E_A.reshape((B * N,) + E_A.shape[2:])
+        eb = E_B.reshape((B * N,) + E_B.shape[2:])
+        if np.iscomplexobj(ea) or np.iscomplexobj(eb):
+            # the paper's 4× real-multiply expansion — no complex on device
+            re, im = worker_products_complex(
+                jnp.asarray(ea.real, self.dtype),
+                jnp.asarray(ea.imag, self.dtype),
+                jnp.asarray(eb.real, self.dtype),
+                jnp.asarray(eb.imag, self.dtype),
+                use_pallas=self.use_pallas)
+            P = np.asarray(re) + 1j * np.asarray(im)
+        else:
+            P = np.asarray(worker_products(jnp.asarray(ea, self.dtype),
+                                           jnp.asarray(eb, self.dtype),
+                                           use_pallas=self.use_pallas))
+        return P.reshape((B, N) + P.shape[1:])
+
+    def sample_latencies(self, rng: np.random.Generator,
+                         N: int) -> np.ndarray:
+        return shifted_exp_times(rng, N, **self.latency_kw)
+
+    @staticmethod
+    def decode_on_mesh(code: CDCCode, A, B, weights, mesh, *,
+                       axis: str = "model", use_pallas: bool | None = None,
+                       dtype=None):
+        """End-to-end device decode: weighted psum over a mesh axis.
+
+        ``weights`` is the incremental decoder's current
+        :meth:`~repro.serving.incremental.IncrementalDecoder.weight_vector`
+        (real — complex weights are rejected upstream by
+        ``decode_weight_vector``'s job-path guard).
+        """
+        import jax.numpy as jnp
+
+        from ..runtime.coded import distributed_coded_matmul, encode_operands
+        if np.iscomplexobj(np.asarray(weights)):
+            raise ValueError("complex decode weights cannot enter the real "
+                             "mesh job path; use a real-point code")
+        dt = jnp.float32 if dtype is None else dtype
+        A_blocks, B_blocks = split_contraction(np.asarray(A), np.asarray(B),
+                                               code.K)
+        E_A, E_B = encode_operands(code, A_blocks, B_blocks)
+        return distributed_coded_matmul(
+            jnp.asarray(E_A, dt), jnp.asarray(E_B, dt),
+            jnp.asarray(np.asarray(weights), dt), mesh, axis=axis,
+            use_pallas=use_pallas)
+
+
+def make_backend(name: str, **kw) -> ExecutionBackend:
+    """Backend factory for the serving CLIs (``sim`` | ``device``)."""
+    if name == "sim":
+        return SimulatedBackend(**kw)
+    if name == "device":
+        return DeviceBackend(**kw)
+    raise ValueError(f"unknown backend {name!r}; known: sim, device")

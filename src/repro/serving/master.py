@@ -1,0 +1,239 @@
+"""Master scheduler: request queue, batching, event-driven refinement loop.
+
+The paper's serving story, productionized: requests enter a queue, the
+master pops them in batches (one encode + one worker dispatch per batch —
+workers compute the stacked products as a single task, so the batch shares
+one latency draw), and answers *stream*: an event loop walks the merged
+sequence of worker completions and deadline ticks, pushing each completed
+product into the request's :class:`IncrementalDecoder` and emitting a
+refined estimate at every tick (and, in ``stream`` mode, at every completion
+event — the paper's successive refinement at its natural granularity).
+
+Timebase: completion times and deadlines live on the simulated latency
+clock (the shifted-exponential model, per batch); wall-clock throughput of
+the serving loop itself (the thing the incremental decoder accelerates) is
+reported separately by ``benchmarks/serve_throughput.py``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.codes.base import CDCCode
+from .backends import ExecutionBackend, SimulatedBackend
+from .cache import DecodeWeightCache
+from .incremental import make_decoder
+
+__all__ = ["ServeConfig", "MatmulRequest", "Answer", "RequestResult",
+           "MasterScheduler", "serve_request", "merged_event_stream"]
+
+
+def merged_event_stream(t_sorted, deadlines) -> list[tuple[float, int, int]]:
+    """``(t, kind, i)`` stream: completion events (kind 0, ``i`` = completion
+    index into the sorted times) merged with deadline ticks (kind 1), ticks
+    firing *after* any completion carrying the same timestamp — the estimate
+    a client reads at t includes every worker that finished by t.
+
+    Shared by the scheduler and ``benchmarks/serve_throughput.py`` so the
+    benchmark measures exactly the answer stream the runtime serves.
+    """
+    events = [(float(t_sorted[i]), 0, i) for i in range(len(t_sorted))]
+    events += [(float(dl), 1, -1) for dl in deadlines]
+    events.sort(key=lambda e: (e[0], e[1]))
+    return events
+
+
+@dataclass
+class ServeConfig:
+    """Knobs of the serving loop (defaults = the historical serve CLI)."""
+
+    deadlines: tuple = (1.1, 1.3, 1.6, 2.0, 3.0)
+    stream: bool = False          # also answer at every completion event
+    batch_size: int = 4           # requests encoded/dispatched together
+    beta_mode: str = "one"
+    decoder: str = "incremental"  # "incremental" | "recompute" (baseline)
+    track_errors: bool = True     # compute C=A@B and report relative errors
+    seed: int = 0
+
+
+@dataclass
+class MatmulRequest:
+    req_id: int
+    A: np.ndarray
+    B: np.ndarray
+
+
+@dataclass
+class Answer:
+    """One emitted refinement of one request."""
+
+    t: float                      # simulated service time of the answer
+    m: int                        # completions incorporated
+    rel_err: float | None         # ‖est - C‖²/‖C‖² (None: no estimate yet
+    #                               or error tracking disabled)
+    exact: bool                   # m reached the recovery threshold
+    kind: str                     # "deadline" | "event"
+
+
+@dataclass
+class RequestResult:
+    req_id: int
+    answers: list = field(default_factory=list)
+    ttfa: float | None = None     # time of the first available estimate
+    t_exact: float | None = None  # time the estimate became exact
+    decode_stats: dict = field(default_factory=dict)
+
+
+_DEFAULT_CACHE = object()        # sentinel: "give me the default LRU";
+#                                  an explicit cache=None disables caching
+
+
+class MasterScheduler:
+    """Queue → batch → dispatch → event-driven incremental decode."""
+
+    def __init__(self, code: CDCCode, backend: ExecutionBackend | None = None,
+                 config: ServeConfig | None = None,
+                 cache: DecodeWeightCache | None = _DEFAULT_CACHE):
+        self.code = code
+        self.backend = backend if backend is not None else SimulatedBackend()
+        self.config = config if config is not None else ServeConfig()
+        self.cache = DecodeWeightCache() if cache is _DEFAULT_CACHE else cache
+        if self.config.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got "
+                             f"{self.config.batch_size}")
+        self.rng = np.random.default_rng(self.config.seed)
+        self._queue: deque[MatmulRequest] = deque()
+        self._next_id = 0
+
+    # --------------------------------------------------------------- intake
+    def submit(self, A: np.ndarray, B: np.ndarray) -> int:
+        """Queue one job, validating its shape before accepting it.
+
+        Mixed shapes are fine across the queue — batches group same-shape
+        runs — but a malformed job must fail here, not deep inside a later
+        batch encode.
+        """
+        A = np.asarray(A)
+        B = np.asarray(B)
+        if A.ndim != 2 or B.ndim != 2 or A.shape[1] != B.shape[0]:
+            raise ValueError(f"need 2-D operands with matching inner dim; "
+                             f"got A {A.shape}, B {B.shape}")
+        if A.shape[1] % self.code.K != 0:
+            raise ValueError(f"inner dim {A.shape[1]} must be divisible by "
+                             f"K={self.code.K} (the contraction splits into "
+                             "K blocks)")
+        req_id = self._next_id
+        self._next_id += 1
+        self._queue.append(MatmulRequest(req_id, A, B))
+        return req_id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ----------------------------------------------------------- event loop
+    def run(self) -> list[RequestResult]:
+        """Serve everything queued; returns results in submission order.
+
+        A batch stacks its requests into one encode + one worker dispatch,
+        so only same-shape runs of the queue batch together.
+        """
+        results: list[RequestResult] = []
+        while self._queue:
+            head = self._queue[0]
+            shape = (head.A.shape, head.B.shape)
+            batch = [self._queue.popleft()]
+            while (self._queue and len(batch) < self.config.batch_size
+                   and (self._queue[0].A.shape,
+                        self._queue[0].B.shape) == shape):
+                batch.append(self._queue.popleft())
+            results.extend(self._serve_batch(batch))
+        return results
+
+    def _serve_batch(self, batch: list[MatmulRequest]) -> list[RequestResult]:
+        code, cfg = self.code, self.config
+        products = self.backend.batch_products(
+            code, [r.A for r in batch], [r.B for r in batch])
+        times = self.backend.sample_latencies(self.rng, code.N)
+        order = np.argsort(times, kind="stable")
+        t_sorted = times[order]
+
+        # oracle-grade β needs each request's true block products; the
+        # closed-form modes don't, so skip the K block matmuls for them
+        needs_oracle = cfg.beta_mode == "oracle"
+        refs = []
+        for r in batch:
+            C = norm = req_oracle = None
+            if cfg.track_errors:
+                C = r.A @ r.B
+                norm = float(np.linalg.norm(C) ** 2)
+            if needs_oracle:
+                from ..core.partition import split_contraction
+                Ab, Bb = split_contraction(np.asarray(r.A), np.asarray(r.B),
+                                           code.K)
+                req_oracle = code.oracle_context(Ab, Bb)
+            refs.append((C, norm, req_oracle))
+
+        decoders = [make_decoder(cfg.decoder, code, beta_mode=cfg.beta_mode,
+                                 oracle=refs[i][2], cache=self.cache)
+                    for i in range(len(batch))]
+        results = [RequestResult(r.req_id) for r in batch]
+        first_t = float(t_sorted[code.first_threshold - 1]) \
+            if code.first_threshold <= code.N else None
+        exact_t = float(t_sorted[code.recovery_threshold - 1]) \
+            if code.recovery_threshold <= code.N else None
+        for res in results:
+            res.ttfa = first_t
+            res.t_exact = exact_t
+
+        R = code.recovery_threshold
+        for t, kind, i in merged_event_stream(t_sorted, cfg.deadlines):
+            if kind == 0:                                   # completion event
+                worker = int(order[i])
+                m = i + 1
+                for dec, p in zip(decoders, products):
+                    dec.push(worker, p[worker])
+                if cfg.stream:
+                    self._emit(batch, decoders, refs, results, t, m, R,
+                               "event")
+            else:                                           # deadline tick
+                m = decoders[0].m
+                self._emit(batch, decoders, refs, results, t, m, R,
+                           "deadline")
+        for res, dec in zip(results, decoders):
+            res.decode_stats = dict(dec.stats)
+        return results
+
+    def _emit(self, batch, decoders, refs, results, t, m, R, kind) -> None:
+        for dec, (C, norm, _), res in zip(decoders, refs, results):
+            est = dec.estimate()
+            err = None
+            if est is not None and C is not None and norm > 0.0:
+                err = float(np.linalg.norm(est - C) ** 2 / norm)
+            res.answers.append(Answer(t=t, m=m, rel_err=err,
+                                      exact=m >= R, kind=kind))
+
+
+def serve_request(code: CDCCode, A, B, rng, *, deadlines,
+                  straggler_frac: float = 0.0, beta_mode: str = "one",
+                  decoder: str = "incremental",
+                  cache: DecodeWeightCache | None = None):
+    """One request through the serving runtime (legacy-shaped entry point).
+
+    Returns ``[(deadline, m_done, rel_err or None), ...]`` exactly as the
+    pre-streaming ``launch/serve.py`` did, but decoding incrementally.  The
+    ``rng`` drives the latency draw, consuming one ``shifted_exp_times`` call
+    like the legacy implementation.
+    """
+    cfg = ServeConfig(deadlines=tuple(deadlines), stream=False, batch_size=1,
+                      beta_mode=beta_mode, decoder=decoder)
+    sched = MasterScheduler(code,
+                            SimulatedBackend(straggler_frac=straggler_frac),
+                            cfg, cache)
+    sched.rng = rng                      # caller-controlled randomness
+    sched.submit(np.asarray(A), np.asarray(B))
+    res = sched.run()[0]
+    return [(a.t, a.m, a.rel_err) for a in res.answers
+            if a.kind == "deadline"]
