@@ -29,13 +29,20 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_BENCH_TRIALS", "10")
         os.environ.setdefault("REPRO_BENCH_NZ", "2000")
     # import AFTER the env is set: common.py reads it at import time
-    from . import (common, engine_speedup, fig2_error_sources, fig3a_tradeoff,
-                   fig3b_correlation, kernel_bench, serve_throughput,
-                   table1_thresholds)
+    from . import (common, design_pareto, engine_speedup, fig2_error_sources,
+                   fig3a_tradeoff, fig3b_correlation, kernel_bench,
+                   serve_throughput, table1_thresholds)
     mods = [table1_thresholds, fig3a_tradeoff, fig2_error_sources,
-            fig3b_correlation, engine_speedup, serve_throughput, kernel_bench]
+            fig3b_correlation, engine_speedup, serve_throughput,
+            design_pareto, kernel_bench]
     if args.only:
-        wanted = set(args.only.split(","))
+        valid = {m.__name__.rsplit(".", 1)[-1] for m in mods}
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        unknown = sorted(wanted - valid)
+        if unknown or not wanted:
+            raise SystemExit(
+                f"--only: unknown module name(s) {unknown or [args.only]}; "
+                f"valid names: {', '.join(sorted(valid))}")
         mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in wanted]
     print("name,us_per_call,derived")
     failures = 0

@@ -21,15 +21,20 @@ from .partition import block_outer_products, split_contraction
 from .points import x_complex, x_equal
 from .poly import (ChebyshevBasis, LagrangeBasis, MonomialBasis,
                    chebyshev_roots)
-from .registry import CODE_NAMES, make_code, paper_fig3a_codes
+from .registry import (CODE_NAMES, make_code, make_code_from_spec,
+                       paper_fig3a_codes)
 from .simulate import (BatchErrorCurves, ErrorCurves, ProblemContext,
                        SimulationEngine, average_curves,
                        average_curves_reference, correlated_problem,
                        random_problem, run_trace, run_trace_reference)
 from .solve import (condition_number, extraction_weights,
                     extraction_weights_batch, fit_coefficients)
-from .straggler import (CompletionBatch, CompletionTrace, simulate_completion,
-                        simulate_completion_batch)
+from .straggler import (LATENCY_MODELS, CompletionBatch, CompletionTrace,
+                        bursty_times, bursty_times_batch, heterogeneous_fleet,
+                        heterogeneous_exp_times, heterogeneous_exp_times_batch,
+                        sample_times, sample_times_batch, shifted_exp_times,
+                        shifted_exp_times_batch, simulate_completion,
+                        simulate_completion_batch, validate_latency_kw)
 
 __all__ = [
     "CDCCode", "DecodeInfo", "MatDotCode", "EpsApproxMatDotCode",
@@ -43,6 +48,11 @@ __all__ = [
     "SimulationEngine", "run_trace", "run_trace_reference", "average_curves",
     "average_curves_reference", "random_problem", "correlated_problem",
     "CompletionTrace", "CompletionBatch", "simulate_completion",
-    "simulate_completion_batch", "chebyshev_roots", "MonomialBasis",
+    "simulate_completion_batch", "make_code_from_spec", "LATENCY_MODELS",
+    "shifted_exp_times", "shifted_exp_times_batch", "heterogeneous_fleet",
+    "heterogeneous_exp_times", "heterogeneous_exp_times_batch",
+    "bursty_times", "bursty_times_batch", "sample_times",
+    "sample_times_batch", "validate_latency_kw", "chebyshev_roots",
+    "MonomialBasis",
     "ChebyshevBasis", "LagrangeBasis",
 ]

@@ -10,7 +10,8 @@ from .codes.matdot import EpsApproxMatDotCode, MatDotCode
 from .codes.orthomatdot import OrthoMatDotCode
 from .points import x_complex
 
-__all__ = ["make_code", "CODE_NAMES", "paper_fig3a_codes"]
+__all__ = ["make_code", "make_code_from_spec", "CODE_NAMES",
+           "paper_fig3a_codes"]
 
 CODE_NAMES = ("matdot", "eps_matdot", "orthomatdot", "lagrange",
               "group_sac", "layer_sac_ortho", "layer_sac_lagrange")
@@ -33,6 +34,21 @@ def make_code(name: str, K: int, N: int, *, eval_points=None,
     if name == "layer_sac_lagrange":
         return LayerSACCode(K, N, base="lagrange", **kw)
     raise ValueError(f"unknown code {name!r}; known: {CODE_NAMES}")
+
+
+def make_code_from_spec(spec, *, rng: np.random.Generator | None = None):
+    """Construct a code from a declarative spec (``repro.design.CodeSpec``).
+
+    Duck-typed: any object with ``family`` / ``K`` / ``N`` attributes and a
+    ``registry_kwargs()`` method (returning the keyword arguments of
+    :func:`make_code`, including ``eval_points`` where the family needs
+    them) builds here — the design subsystem stays a pure consumer of the
+    registry, and a spec round-trips to the exact code it names.
+    """
+    kw = dict(spec.registry_kwargs())
+    eval_points = kw.pop("eval_points", None)
+    return make_code(spec.family, spec.K, spec.N, eval_points=eval_points,
+                     rng=rng, **kw)
 
 
 def paper_fig3a_codes(K: int = 8, N: int = 24):

@@ -1,0 +1,42 @@
+"""Straggler-aware code-design autotuner — the layer between simulation
+and serving.
+
+The paper's §IV design guidelines (group splits, layer ε, β regimes) assume
+an operator picks the code by hand; the right operating point actually
+depends on the fleet's straggler distribution and the accuracy target.
+This subsystem automates the choice:
+
+* :class:`CodeSpec` / :class:`CodeSpace` — declarative, hashable candidate
+  configurations across every registered family, constructible through
+  ``core/registry.py`` (:func:`repro.core.registry.make_code_from_spec`).
+* :class:`StragglerProfile` — shifted-exponential fit (bias-corrected) with
+  an empirical-CDF bootstrap fallback, from observed completion times.
+* :class:`ParetoSearch` — batched-engine sweep returning the (error at
+  deadline, time-to-accuracy, worker cost) frontier, with dominance pruning
+  and (spec, profile)-keyed result caching.
+* :class:`AdaptivePolicy` — the serving hook: refit the profile online
+  every W requests and switch the scheduler to the frontier pick for the
+  operator's accuracy/deadline target.
+
+Quickstart::
+
+    from repro.design import CodeSpace, ParetoSearch, StragglerProfile
+    profile = StragglerProfile.fit(observed_times)          # (trials, N)
+    search = ParetoSearch(CodeSpace(K=8, N=24), profile,
+                          deadline=2.0, target_error=1e-2)
+    print(search.best().spec.label())
+    for p in search.frontier():
+        print(p.spec.label(), p.err_at_deadline, p.tta, p.cost)
+
+Serving integration: ``python -m repro.launch.serve --autotune``.
+"""
+from .pareto import DesignPoint, ParetoSearch, pareto_frontier
+from .policy import AdaptivePolicy, RetuneEvent
+from .profile import GeneratorProfile, StragglerProfile
+from .space import CodeSpace, CodeSpec, default_spec, group_compositions
+
+__all__ = [
+    "CodeSpec", "CodeSpace", "default_spec", "group_compositions",
+    "StragglerProfile", "GeneratorProfile", "DesignPoint", "ParetoSearch",
+    "pareto_frontier", "AdaptivePolicy", "RetuneEvent",
+]

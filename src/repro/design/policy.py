@@ -1,0 +1,139 @@
+"""Adaptive serving policy: online profile refits driving code switches.
+
+The serving master (``repro.serving.master.MasterScheduler``) feeds every
+dispatched batch's observed per-worker completion times to
+:meth:`AdaptivePolicy.observe` and consults :meth:`maybe_retune` between
+batches.  Every ``window`` served requests the policy refits a
+:class:`~repro.design.profile.StragglerProfile` from the observation buffer,
+sweeps the :class:`~repro.design.space.CodeSpace` with a
+:class:`~repro.design.pareto.ParetoSearch`, and — when the frontier pick for
+the operator's (target error, deadline) moved — hands the scheduler the
+newly built code.  Switches happen only at batch boundaries, so a swapped-in
+code serves exactly as it would have from a fresh scheduler (pinned
+bit-identical by ``tests/test_design.py``).
+
+The policy owns its randomness (search seeds, G-SAC shuffles); it never
+draws from the scheduler's rng, so attaching a policy does not perturb the
+served latency stream.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from .pareto import DesignPoint, ParetoSearch
+from .profile import StragglerProfile
+from .space import CodeSpace
+
+__all__ = ["AdaptivePolicy", "RetuneEvent"]
+
+
+@dataclass(frozen=True)
+class RetuneEvent:
+    """One refit: what was observed, what was picked, whether it switched."""
+
+    n_seen: int                   # requests observed when the refit fired
+    profile: StragglerProfile
+    point: DesignPoint
+    switched: bool
+
+
+class AdaptivePolicy:
+    """Refit-and-switch policy over a declarative code space.
+
+    ``window`` is the refit cadence in served requests; ``buffer`` bounds
+    the observation history (rows of per-worker times) so long-running
+    services track drift instead of averaging over it.
+    """
+
+    def __init__(self, space: CodeSpace, *, deadline: float,
+                 target_error: float = 1e-2, window: int = 32,
+                 trials: int = 48, seed: int = 0, buffer: int = 1024,
+                 profile_kind: str = "auto", switch_margin: float = 0.05):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if not 0.0 <= switch_margin < 1.0:
+            raise ValueError(f"switch_margin must be in [0, 1), got "
+                             f"{switch_margin}")
+        self.space = space
+        self.deadline = float(deadline)
+        self.target_error = float(target_error)
+        self.window = int(window)
+        self.trials = int(trials)
+        self.seed = int(seed)
+        self.profile_kind = profile_kind
+        self.switch_margin = float(switch_margin)
+        self._times: deque[np.ndarray] = deque(maxlen=int(buffer))
+        self._since_refit = 0
+        self._seen = 0
+        self.current_spec = None
+        self.current_point: DesignPoint | None = None
+        self.history: list[RetuneEvent] = []
+        self._search: ParetoSearch | None = None
+
+    # ---------------------------------------------------------- observation
+    def observe(self, times: np.ndarray, n_requests: int = 1) -> None:
+        """Record one dispatched batch's per-worker completion times."""
+        self._times.append(np.asarray(times, dtype=np.float64))
+        self._since_refit += int(n_requests)
+        self._seen += int(n_requests)
+
+    @property
+    def n_observed(self) -> int:
+        return self._seen
+
+    # --------------------------------------------------------------- retune
+    def fit_profile(self) -> StragglerProfile:
+        """Fit the straggler profile from the current observation buffer."""
+        if not self._times:
+            raise ValueError("no observations yet; cannot fit a profile")
+        rows = list(self._times)
+        N = rows[0].shape[-1]
+        if any(r.shape[-1] != N for r in rows):
+            # fleet size changed mid-stream (N-switch): pool the times
+            return StragglerProfile.fit(np.concatenate([r.ravel()
+                                                        for r in rows]),
+                                        kind=self.profile_kind)
+        return StragglerProfile.fit(np.stack(rows), kind=self.profile_kind)
+
+    def retune(self):
+        """Refit + sweep now.  Returns the newly built code on a switch,
+        else ``None``; either way the pick lands in :attr:`history`."""
+        profile = self.fit_profile()
+        search = ParetoSearch(self.space, profile, deadline=self.deadline,
+                              target_error=self.target_error,
+                              trials=self.trials, seed=self.seed)
+        # a refit with an unchanged profile (rare, but possible with a
+        # parametric fit on a stable buffer) can reuse the previous sweep;
+        # a changed profile shares no keys, so don't carry stale entries
+        if (self._search is not None
+                and search._profile_key == self._search._profile_key):
+            search._cache.update(self._search._cache)
+        self._search = search
+        best = search.best()
+        switched = best.spec != self.current_spec
+        if switched and self.current_spec is not None:
+            # switch hysteresis: near-ties flip-flop with profile noise, and
+            # every flip invalidates warm state downstream — only move when
+            # the candidate beats the incumbent by the margin (same profile,
+            # same shared traces: a paired comparison)
+            incumbent = search.evaluate(self.current_spec)
+            if best.err_at_deadline > ((1.0 - self.switch_margin)
+                                       * incumbent.err_at_deadline):
+                best, switched = incumbent, False
+        self.history.append(RetuneEvent(n_seen=self._seen, profile=profile,
+                                        point=best, switched=switched))
+        self.current_point = best
+        if not switched:
+            return None
+        self.current_spec = best.spec
+        return best.spec.build(rng=np.random.default_rng([self.seed, 0x5AC]))
+
+    def maybe_retune(self):
+        """Window-gated :meth:`retune` — the scheduler's per-batch hook."""
+        if self._since_refit < self.window or not self._times:
+            return None
+        self._since_refit = 0
+        return self.retune()

@@ -16,6 +16,15 @@ Usage::
         --straggler-frac 0.2 --deadlines 0.4,0.7,1.0,1.5 --stream
     PYTHONPATH=src python -m repro.launch.serve --code gsac_auto --K 4 \
         --N 12 --backend device
+    PYTHONPATH=src python -m repro.launch.serve --autotune \
+        --target-error 1e-2 --profile-window 16 --requests 64
+
+``--autotune`` attaches the straggler-aware design policy
+(:mod:`repro.design`): every ``--profile-window`` requests the master refits
+a straggler profile from observed worker latencies, sweeps the code space
+through the batched simulation engine, and switches to the Pareto pick for
+``--target-error`` at the tightest deadline.  The ``--code`` argument is the
+starting code only.
 """
 from __future__ import annotations
 
@@ -140,6 +149,13 @@ def main(argv=None):
                     help="simulated numpy workers or the jax device kernels")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="decode-weight LRU entries (0 disables)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="refit a straggler profile online and switch to "
+                    "the Pareto-optimal code for the accuracy target")
+    ap.add_argument("--target-error", type=float, default=1e-2,
+                    help="autotune accuracy target (relative error)")
+    ap.add_argument("--profile-window", type=int, default=16,
+                    help="requests between autotune profile refits")
     args = ap.parse_args(argv)
 
     if args.inner % args.K != 0:
@@ -160,13 +176,27 @@ def main(argv=None):
     # so the stats line only prints when caching is actually in play
     cache = DecodeWeightCache(args.cache_size) \
         if args.cache_size > 0 and args.decoder == "incremental" else None
-    sched = MasterScheduler(code, backend, cfg, cache)
+    policy = None
+    if args.autotune:
+        if args.profile_window < 1:
+            raise SystemExit(f"[serve] invalid arguments:\n  "
+                             f"--profile-window must be >= 1; got "
+                             f"{args.profile_window}")
+        from repro.design import AdaptivePolicy, CodeSpace
+        policy = AdaptivePolicy(
+            CodeSpace(args.K, args.N, beta_modes=(args.beta,)),
+            deadline=min(deadlines), target_error=args.target_error,
+            window=args.profile_window, seed=args.seed)
+    sched = MasterScheduler(code, backend, cfg, cache, policy=policy)
 
     rng = np.random.default_rng(args.seed)
+    tune = (f" autotune(target={args.target_error:g}, "
+            f"window={args.profile_window}, "
+            f"space={len(policy.space)})" if policy else "")
     print(f"[serve] code={args.code} K={args.K} N={args.N} "
           f"R={code.recovery_threshold} first={code.first_threshold} "
           f"straggler_frac={args.straggler_frac} decoder={args.decoder} "
-          f"backend={args.backend} batch={args.batch_size}")
+          f"backend={args.backend} batch={args.batch_size}{tune}")
     for _ in range(args.requests):
         A = rng.standard_normal((args.rows, args.inner))
         B = rng.standard_normal((args.inner, args.rows))
@@ -209,6 +239,17 @@ def main(argv=None):
         print(f"[serve] decode-weight cache: {st['hits']} hits / "
               f"{st['misses']} misses (hit rate {st['hit_rate']:.0%}, "
               f"size {st['size']})")
+    if policy is not None:
+        for ev in policy.history:
+            mark = "switch ->" if ev.switched else "keep"
+            print(f"[serve] retune @{ev.n_seen} req "
+                  f"({ev.profile.kind} profile, ks={ev.profile.ks:.3f}): "
+                  f"{mark} {ev.point.spec.label()} "
+                  f"(E[err@{min(deadlines):g}]={ev.point.err_at_deadline:.2e},"
+                  f" tta={ev.point.tta:.2f})")
+        if not policy.history:
+            print(f"[serve] autotune: window {args.profile_window} never "
+                  f"filled ({args.requests} requests) — no retune ran")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,8 @@ import numpy as np
 
 from ..core.codes.base import CDCCode
 from ..core.partition import split_contraction
-from ..core.straggler import shifted_exp_times
+from ..core.straggler import (sample_times, shifted_exp_times,
+                              validate_latency_kw)
 
 __all__ = ["ExecutionBackend", "SimulatedBackend", "DeviceBackend",
            "make_backend"]
@@ -58,16 +59,21 @@ class ExecutionBackend:
 
 
 class SimulatedBackend(ExecutionBackend):
-    """Host numpy products; shifted-exponential worker latencies (§V)."""
+    """Host numpy products; simulated worker latencies (§V).
+
+    ``model`` selects the latency generator (``shifted_exp`` default,
+    ``heterogeneous``, ``bursty`` — see :mod:`repro.core.straggler`); the
+    remaining keywords pass through to it.  This is the scenario knob the
+    adaptive policy is tested against — a service whose fleet *is* bursty
+    should retune to a different code than one with i.i.d. workers.
+    """
 
     name = "sim"
 
-    def __init__(self, *, shift: float = 1.0, rate: float = 1.0,
-                 straggler_frac: float = 0.0,
-                 straggler_slowdown: float = 5.0):
-        self.latency_kw = {"shift": shift, "rate": rate,
-                           "straggler_frac": straggler_frac,
-                           "straggler_slowdown": straggler_slowdown}
+    def __init__(self, *, model: str = "shifted_exp", **latency_kw):
+        validate_latency_kw(model, latency_kw)    # typos fail here, not at
+        self.model = model                        # the first dispatch
+        self.latency_kw = latency_kw
 
     def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
         E_A, E_B = self._encode_batch(code, As, Bs)
@@ -75,7 +81,7 @@ class SimulatedBackend(ExecutionBackend):
 
     def sample_latencies(self, rng: np.random.Generator,
                          N: int) -> np.ndarray:
-        return shifted_exp_times(rng, N, **self.latency_kw)
+        return sample_times(rng, N, model=self.model, **self.latency_kw)
 
 
 class DeviceBackend(ExecutionBackend):

@@ -91,21 +91,32 @@ _DEFAULT_CACHE = object()        # sentinel: "give me the default LRU";
 
 
 class MasterScheduler:
-    """Queue → batch → dispatch → event-driven incremental decode."""
+    """Queue → batch → dispatch → event-driven incremental decode.
+
+    ``policy`` (optional) is the adaptive-serving hook
+    (:class:`repro.design.AdaptivePolicy`, duck-typed): the scheduler feeds
+    it every dispatched batch's observed worker latencies and consults it
+    between batches; when a refit moves the frontier pick, the scheduler
+    switches codes via :meth:`set_code` before the next dispatch.
+    """
 
     def __init__(self, code: CDCCode, backend: ExecutionBackend | None = None,
                  config: ServeConfig | None = None,
-                 cache: DecodeWeightCache | None = _DEFAULT_CACHE):
+                 cache: DecodeWeightCache | None = _DEFAULT_CACHE,
+                 policy=None):
         self.code = code
         self.backend = backend if backend is not None else SimulatedBackend()
         self.config = config if config is not None else ServeConfig()
         self.cache = DecodeWeightCache() if cache is _DEFAULT_CACHE else cache
+        self.policy = policy
         if self.config.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.config.batch_size}")
         self.rng = np.random.default_rng(self.config.seed)
         self._queue: deque[MatmulRequest] = deque()
         self._next_id = 0
+        self._served = 0
+        self.switches: list[tuple[int, str, str]] = []
 
     # --------------------------------------------------------------- intake
     def submit(self, A: np.ndarray, B: np.ndarray) -> int:
@@ -133,6 +144,24 @@ class MasterScheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    # ---------------------------------------------------------- code switch
+    def set_code(self, code: CDCCode) -> None:
+        """Switch the serving code (adaptive policy, operator override).
+
+        Only called between batches — in-flight decodes always finish on the
+        code that dispatched them.  The decode-weight cache needs no flush:
+        entries are keyed on ``code.cache_key()``.  Queued requests must
+        stay servable, so the new K is validated against the queue first.
+        """
+        bad = [r.req_id for r in self._queue if r.A.shape[1] % code.K != 0]
+        if bad:
+            raise ValueError(
+                f"cannot switch to {code!r}: queued requests {bad} have "
+                f"inner dims not divisible by K={code.K}")
+        if code is not self.code:
+            self.switches.append((self._served, repr(self.code), repr(code)))
+        self.code = code
+
     # ----------------------------------------------------------- event loop
     def run(self) -> list[RequestResult]:
         """Serve everything queued; returns results in submission order.
@@ -150,6 +179,11 @@ class MasterScheduler:
                         self._queue[0].B.shape) == shape):
                 batch.append(self._queue.popleft())
             results.extend(self._serve_batch(batch))
+            self._served += len(batch)
+            if self.policy is not None:
+                new_code = self.policy.maybe_retune()
+                if new_code is not None:
+                    self.set_code(new_code)
         return results
 
     def _serve_batch(self, batch: list[MatmulRequest]) -> list[RequestResult]:
@@ -157,6 +191,8 @@ class MasterScheduler:
         products = self.backend.batch_products(
             code, [r.A for r in batch], [r.B for r in batch])
         times = self.backend.sample_latencies(self.rng, code.N)
+        if self.policy is not None:
+            self.policy.observe(times, n_requests=len(batch))
         order = np.argsort(times, kind="stable")
         t_sorted = times[order]
 

@@ -1,0 +1,231 @@
+"""Design-autotuner subsystem: spec round-trips, profile fits, Pareto
+dominance, and the adaptive serving switch.
+
+The load-bearing pins:
+
+* every ``CODE_NAMES`` family round-trips spec → registry → code;
+* profile fitting recovers known (shift, rate) and falls back to the
+  empirical CDF exactly when the parametric model cannot fit;
+* the frontier is dominance-correct on a hand-built toy;
+* an :class:`AdaptivePolicy` code switch serves bit-identically to a fresh
+  scheduler running the chosen code directly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CODE_NAMES, make_code_from_spec
+from repro.core.straggler import (heterogeneous_exp_times_batch,
+                                  shifted_exp_times_batch)
+from repro.design import (AdaptivePolicy, CodeSpace, CodeSpec, DesignPoint,
+                          GeneratorProfile, ParetoSearch, StragglerProfile,
+                          default_spec, group_compositions, pareto_frontier)
+from repro.serving import MasterScheduler, ServeConfig, SimulatedBackend
+
+K, N = 4, 12
+
+
+# ------------------------------------------------------------ specs / space
+
+@pytest.mark.parametrize("family", CODE_NAMES)
+def test_spec_roundtrip_every_family(family):
+    """spec → make_code round-trip: right class, right knobs, deterministic."""
+    spec = default_spec(family, K, N)
+    assert not spec.problems()
+    code = spec.build()
+    via_registry = make_code_from_spec(spec)
+    assert type(code) is type(via_registry)
+    assert code.name == family
+    assert (code.K, code.N) == (K, N)
+    # same spec → identical decode identity (the engine's grouping key)
+    assert code.cache_key() == via_registry.cache_key()
+    assert hash(spec) == hash(default_spec(family, K, N))
+
+
+def test_spec_knobs_reach_the_code():
+    gsac = CodeSpec("group_sac", K, N, radius=0.2, groups=(3, 1)).build()
+    assert list(gsac.group_sizes) == [3, 1]
+    np.testing.assert_allclose(np.abs(gsac.eval_points), 0.2)
+    lsac = CodeSpec("layer_sac_ortho", K, N, eps=1e-3).build()
+    assert lsac.eps == 1e-3
+    with pytest.raises(ValueError, match="unknown family"):
+        CodeSpec("nope", K, N)
+    with pytest.raises(ValueError, match="invalid spec"):
+        CodeSpec("matdot", 8, 9, radius=0.1).build()      # N < 2K-1
+
+
+def test_group_compositions_and_space_pruning():
+    comps = list(group_compositions(4, 2))
+    assert (4,) in comps and (1, 3) in comps and (3, 1) in comps
+    assert all(sum(c) == 4 for c in comps)
+    assert len(comps) == 1 + 3                            # D=1 plus D=2
+    space = CodeSpace(K, N, max_groups=2)
+    specs = space.specs()
+    assert len(specs) == len(set(specs))                  # hashable + deduped
+    for spec in specs:
+        assert not spec.problems()
+        spec.build()                                      # all constructible
+    # K=4 N=6 prunes everything except nothing → empty space raises
+    with pytest.raises(ValueError, match="empty"):
+        CodeSpace(4, 6).specs()
+
+
+# ------------------------------------------------------------------ profile
+
+def test_profile_fit_recovers_shift_and_rate():
+    times = shifted_exp_times_batch(np.random.default_rng(0), 24, 400,
+                                    shift=1.5, rate=2.0)
+    p = StragglerProfile.fit(times, kind="shifted_exp")
+    assert abs(p.shift - 1.5) < 0.03
+    assert abs(p.rate - 2.0) < 0.1
+    # auto on a clean shifted-exp fleet keeps the parametric model
+    assert StragglerProfile.fit(times).kind == "shifted_exp"
+
+
+def test_profile_auto_falls_back_to_empirical():
+    times = heterogeneous_exp_times_batch(np.random.default_rng(1), 24, 400,
+                                          slow_frac=0.3, slow_shift=4.0,
+                                          slow_rate=0.3)
+    p = StragglerProfile.fit(times)
+    assert p.kind == "empirical" and p.ks > 0.08
+    # per-worker bootstrap keeps the slow class where it is
+    s = p.sample_times(np.random.default_rng(2), 24, 500)
+    assert s.shape == (500, 24)
+    assert s[:, :7].mean() > 2.0 * s[:, 7:].mean()
+    # sampling is reproducible and batch orders match times
+    b1 = p.sample_batch(np.random.default_rng(3), 24, 8)
+    b2 = p.sample_batch(np.random.default_rng(3), 24, 8)
+    np.testing.assert_array_equal(b1.times, b2.times)
+    for row, t in zip(b1.orders, b1.times):
+        assert np.array_equal(row, np.argsort(t, kind="stable"))
+
+
+def test_profile_auto_small_sample_keeps_parametric_fit():
+    """The KS fallback has a 1/√n floor: a tiny observation window on a
+    genuinely shifted-exp fleet must not trip to empirical on pure
+    sampling noise (bootstrapping 2 rows would be far worse)."""
+    times = shifted_exp_times_batch(np.random.default_rng(6), 12, 2)
+    p = StragglerProfile.fit(times)              # n = 24 samples
+    assert p.kind == "shifted_exp"
+
+
+def test_profile_rejects_bad_input():
+    with pytest.raises(ValueError, match="at least 2"):
+        StragglerProfile.fit([1.0])
+    with pytest.raises(ValueError, match="finite"):
+        StragglerProfile.fit([1.0, np.nan, 2.0])
+    with pytest.raises(ValueError, match="unknown profile kind"):
+        StragglerProfile.fit([1.0, 2.0], kind="nope")
+
+
+# ------------------------------------------------------------------- pareto
+
+def test_pareto_frontier_dominance_on_toy():
+    specs = [default_spec("matdot", K, N)] * 3
+    a = DesignPoint(specs[0], err_at_deadline=0.10, tta=1.0, cost=10)
+    b = DesignPoint(specs[1], err_at_deadline=0.20, tta=2.0, cost=10)
+    c = DesignPoint(specs[2], err_at_deadline=0.05, tta=3.0, cost=5)
+    front = pareto_frontier([a, b, c])
+    assert front == [a, c]                    # b dominated by a; a,c trade off
+    assert a.dominates(b) and not a.dominates(c) and not c.dominates(a)
+    # equal points never dominate each other
+    assert not a.dominates(DesignPoint(specs[0], 0.10, 1.0, 10))
+
+
+def test_pareto_search_caches_and_picks_sanely():
+    profile = GeneratorProfile("heterogeneous", slow_frac=0.3,
+                               slow_shift=4.0, slow_rate=0.3)
+    search = ParetoSearch(CodeSpace.tiny(K, N), profile, deadline=1.8,
+                          target_error=1e-2, trials=24, seed=0)
+    points = search.run()
+    assert len(points) == len(CodeSpace.tiny(K, N))
+    again = search.run()
+    assert search.cache_hits >= len(points)           # second sweep cached
+    assert [p.spec for p in points] == [p.spec for p in again]
+    best = search.best()
+    assert min(p.err_at_deadline for p in points) == best.err_at_deadline
+    front = search.frontier()
+    assert best.spec in {p.spec for p in front}       # pick is on the frontier
+    for p in points:
+        assert 0.0 <= p.err_at_deadline <= 1.0 + 1e-9
+        assert p.cost == N and 0.0 <= p.reach_frac <= 1.0
+    # plain matdot serves nothing below R → worst error of the tiny space
+    worst = max(points, key=lambda p: p.err_at_deadline)
+    assert worst.spec.family in ("matdot", "orthomatdot", "lagrange")
+
+
+# ------------------------------------------------------------------- policy
+
+def _requests(rng, n, rows=24, inner=256):
+    return [(rng.standard_normal((rows, inner)),
+             rng.standard_normal((inner, rows))) for _ in range(n)]
+
+
+def test_policy_switch_bit_identical_to_direct_code():
+    """After an adaptive switch, the scheduler serves exactly as a fresh
+    scheduler running the chosen code directly (same rng, same requests)."""
+    backend_kw = dict(model="heterogeneous", slow_frac=0.3, slow_shift=4.0,
+                      slow_rate=0.3)
+    cfg = ServeConfig(deadlines=(1.5, 2.5), batch_size=2, seed=0)
+    policy = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5,
+                            target_error=1e-2, window=4, trials=16, seed=1)
+    start = default_spec("matdot", K, N).build()
+    sched = MasterScheduler(start, SimulatedBackend(**backend_kw), cfg,
+                            policy=policy)
+    rng = np.random.default_rng(5)
+    for A, B in _requests(rng, 6):
+        sched.submit(A, B)
+    sched.run()
+    assert sched.switches, "policy never switched — test setup is broken"
+    assert policy.history and policy.history[0].switched
+    chosen = sched.code
+    assert chosen is not start
+
+    # phase 2: aligned rng streams, same requests through both schedulers
+    reqs = _requests(np.random.default_rng(7), 3)
+    sched.rng = np.random.default_rng(99)
+    for A, B in reqs:
+        sched.submit(A, B)
+    res_switched = sched.run()
+
+    direct = MasterScheduler(chosen, SimulatedBackend(**backend_kw), cfg)
+    direct.rng = np.random.default_rng(99)
+    for A, B in reqs:
+        direct.submit(A, B)
+    res_direct = direct.run()
+
+    assert len(res_switched) == len(res_direct)
+    for rs, rd in zip(res_switched, res_direct):
+        assert rs.ttfa == rd.ttfa and rs.t_exact == rd.t_exact
+        assert len(rs.answers) == len(rd.answers)
+        for a, d in zip(rs.answers, rd.answers):
+            assert a.t == d.t and a.m == d.m and a.kind == d.kind
+            assert a.exact == d.exact
+            assert (a.rel_err is None) == (d.rel_err is None)
+            if a.rel_err is not None:
+                assert a.rel_err == d.rel_err         # bit-identical
+
+
+def test_policy_window_gates_retunes():
+    policy = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=8,
+                            trials=8, seed=0)
+    rng = np.random.default_rng(0)
+    assert policy.maybe_retune() is None              # nothing observed
+    for _ in range(7):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    assert policy.maybe_retune() is None              # window not filled
+    policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    code = policy.maybe_retune()                      # 8th request: fires
+    assert code is not None and policy.current_spec is not None
+    assert policy.history[-1].point.spec == policy.current_spec
+    # same profile, same space → second retune keeps the pick (no switch)
+    for _ in range(8):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    assert policy.maybe_retune() is None
+    assert not policy.history[-1].switched
+
+
+def test_set_code_guards_queued_requests():
+    sched = MasterScheduler(default_spec("matdot", 4, 12).build())
+    sched.submit(np.zeros((4, 8)), np.zeros((8, 4)))  # inner=8: K=4 ok
+    with pytest.raises(ValueError, match="not divisible"):
+        sched.set_code(default_spec("matdot", 3, 12).build())
