@@ -18,7 +18,6 @@ machine-readable ``BENCH_summary.json`` artifact next to the CSVs.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -71,10 +70,15 @@ def save_rows(fname: str, header: str, rows) -> None:
 
 
 def write_bench_json(fname: str = "BENCH_summary.json") -> str:
-    """Dump every emitted row + the run configuration as one JSON artifact."""
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    """Dump every emitted row + the run configuration as one JSON artifact.
+
+    Atomic (``repro.ioutil.write_json_atomic``): a crash mid-dump
+    (OOM-killed CI run, non-serializable row) never leaves a truncated
+    ``BENCH_summary.json`` for the artifact upload / regression gate to
+    choke on.
+    """
+    from repro.ioutil import write_json_atomic
     path = os.path.join(RESULTS_DIR, fname)
-    with open(path, "w") as f:
-        json.dump({"config": {"trials": TRIALS, "nz": NZ, **sim_kwargs()},
-                   "rows": _ROWS}, f, indent=2)
-    return path
+    return write_json_atomic(path, {"config": {"trials": TRIALS, "nz": NZ,
+                                               **sim_kwargs()},
+                                    "rows": _ROWS}, indent=2)

@@ -1,0 +1,215 @@
+"""Benchmark-regression gate: current ``BENCH_summary.json`` vs a committed
+baseline.
+
+The CI bench job has always *run* the quick benchmarks but never *gated* on
+them — a PR that halved the engine speedup or doubled a reproduction error
+landed green.  This module fails the build when any gated metric regresses
+more than ``--tolerance`` (default 20%) against the committed
+``results/bench/BENCH_baseline.json``.
+
+What is gated, and what deliberately is not:
+
+* **Deterministic metrics** (``err*``, ``λ*``, ``max_rel_dev``,
+  ``vs_best``/``vs_worst``, ``saved``, ``mean_ttfa`` — computed on the
+  seeded simulated clock, so they reproduce across machines) are gated at
+  ``--tolerance``.
+* Values at the **noise floor** (both < 1e-12: exact-recovery residuals)
+  pass regardless of ratio — relative motion of 1e-25 vs 1e-18 is float
+  noise, not a regression.
+* **Wall-clock ratios** (``speedup``, ``rps_gain`` — same-machine ratios,
+  so they transfer across runners, but a loaded machine still skews them
+  ±40% in practice) are gated at the wider ``--ratio-tolerance``: the gate
+  catches a collapsed optimization, not scheduler jitter.
+* **Absolute-throughput metrics** (``us_per_call``, ``req_per_sec``,
+  ``GBps``, ``GFLOPs``, ``us_per_tick_base``) are machine-dependent — a
+  shared CI runner varies far beyond any honest threshold — so they are
+  gated only when ``--time-tolerance`` is set explicitly (fractional,
+  e.g. ``2.0`` = fail when 3× slower).
+* A benchmark row present in the baseline but **missing** from the current
+  run fails (a silently dropped benchmark is the worst regression).
+
+Refreshing the baseline: run the quick suite, then
+``python -m benchmarks.compare --update`` and commit the result.  In CI the
+gate is skipped when the commit message contains ``[bench-baseline]`` (the
+escape hatch for intentional re-baselining PRs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+BASELINE = os.path.join(RESULTS_DIR, "BENCH_baseline.json")
+CURRENT = os.path.join(RESULTS_DIR, "BENCH_summary.json")
+
+NOISE_FLOOR = 1e-12
+
+# metric-key direction tables.  Prefix-matched (err_m8, err_at_R, λ0.001 ...)
+# so new benchmarks get gated without touching this file as long as they
+# reuse the naming vocabulary.
+HIGHER_BETTER = ("vs_worst", "saved", "hit_rate", "reach")
+LOWER_BETTER = ("err", "approx_err", "max_rel_dev", "vs_best", "λ", "lam",
+                "mean_ttfa", "elastic_ws")
+# wall-clock ratios: transferable but load-sensitive — wider tolerance
+RATIO_HIGHER = ("speedup", "rps_gain")
+# machine-dependent absolutes: only gated with an explicit --time-tolerance
+TIMING_HIGHER = ("req_per_sec", "GBps", "GFLOPs")
+TIMING_LOWER = ("us_per_tick_base", "us_per_call")
+
+
+def _parse_metrics(derived: str) -> dict[str, float]:
+    """``key=value`` tokens of a derived string with numeric values."""
+    out: dict[str, float] = {}
+    for token in str(derived).split(";"):
+        if "=" not in token:
+            continue
+        key, _, raw = token.partition("=")
+        raw = raw.strip().rstrip("x%")
+        try:
+            out[key.strip()] = float(raw)
+        except ValueError:
+            continue                      # labels, tuples, code names
+    return out
+
+
+def _classify(key: str, time_gated: bool) -> tuple[str, str] | None:
+    """``(direction, tolerance-class)`` for gated keys, ``None`` otherwise."""
+    for prefix in HIGHER_BETTER:
+        if key.startswith(prefix):
+            return "higher", "quality"
+    for prefix in LOWER_BETTER:
+        if key.startswith(prefix):
+            return "lower", "quality"
+    for prefix in RATIO_HIGHER:
+        if key.startswith(prefix):
+            return "higher", "ratio"
+    if time_gated:
+        for prefix in TIMING_HIGHER:
+            if key.startswith(prefix):
+                return "higher", "timing"
+        for prefix in TIMING_LOWER:
+            if key.startswith(prefix):
+                return "lower", "timing"
+    return None
+
+
+def compare_rows(base_rows, cur_rows, *, tolerance: float,
+                 time_tolerance: float | None,
+                 ratio_tolerance: float = 0.5) -> list[str]:
+    """All regressions of ``cur_rows`` vs ``base_rows`` (empty = gate passes)."""
+    current = {r["name"]: r for r in cur_rows}
+    problems: list[str] = []
+    for base in base_rows:
+        name = base["name"]
+        cur = current.get(name)
+        if cur is None:
+            problems.append(f"{name}: present in baseline but missing from "
+                            "the current run (benchmark dropped?)")
+            continue
+        base_m = _parse_metrics(base.get("derived", ""))
+        cur_m = _parse_metrics(cur.get("derived", ""))
+        base_m["us_per_call"] = float(base.get("us_per_call", 0.0))
+        cur_m["us_per_call"] = float(cur.get("us_per_call", 0.0))
+        for key, base_v in base_m.items():
+            classified = _classify(key, time_tolerance is not None)
+            if classified is None:
+                continue
+            direction, klass = classified
+            if key not in cur_m:
+                problems.append(f"{name}: gated metric {key} disappeared "
+                                "from the current run (format change? "
+                                "refresh the baseline with --update)")
+                continue
+            cur_v = cur_m[key]
+            tol = {"quality": tolerance, "ratio": ratio_tolerance,
+                   "timing": time_tolerance}[klass]
+            pct = (cur_v / base_v - 1.0) * 100 if abs(base_v) > 0 else 0.0
+            if direction == "lower":
+                if abs(base_v) < NOISE_FLOOR and abs(cur_v) < NOISE_FLOOR:
+                    continue              # both at the float noise floor
+                if cur_v > base_v * (1.0 + tol) + NOISE_FLOOR:
+                    problems.append(
+                        f"{name}: {key} regressed {base_v:.4g} -> "
+                        f"{cur_v:.4g} ({pct:+.0f}%, tolerance "
+                        f"{tol * 100:.0f}%)")
+            else:
+                if cur_v < base_v * (1.0 - tol):
+                    problems.append(
+                        f"{name}: {key} regressed {base_v:.4g} -> "
+                        f"{cur_v:.4g} ({pct:+.0f}%, tolerance "
+                        f"{tol * 100:.0f}%)")
+    return problems
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", default=CURRENT)
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression for deterministic "
+                    "metrics")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.5,
+                    help="allowed fractional regression for wall-clock "
+                    "ratio metrics (speedups), which wobble with machine "
+                    "load")
+    ap.add_argument("--time-tolerance", type=float, default=None,
+                    help="also gate machine-dependent timing metrics at "
+                    "this fractional tolerance (off by default: shared CI "
+                    "runners vary far beyond any honest threshold)")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh the baseline from the current summary "
+                    "instead of comparing")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        if not os.path.exists(args.current):
+            raise SystemExit(f"[compare] cannot update: {args.current} does "
+                             "not exist (run `python -m benchmarks.run "
+                             "--quick` first)")
+        shutil.copyfile(args.current, args.baseline)
+        print(f"[compare] baseline refreshed from {args.current}")
+        return
+
+    for path, flag in ((args.baseline, "--baseline"),
+                       (args.current, "--current")):
+        if not os.path.exists(path):
+            raise SystemExit(f"[compare] {flag} {path} does not exist"
+                             + ("" if flag == "--current" else
+                                " (commit one with --update)"))
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+    if base.get("config") != cur.get("config"):
+        print(f"[compare] note: config differs (baseline "
+              f"{base.get('config')} vs current {cur.get('config')}) — "
+              "quality gates assume the quick-mode configuration",
+              file=sys.stderr)
+    problems = compare_rows(base.get("rows", []), cur.get("rows", []),
+                            tolerance=args.tolerance,
+                            time_tolerance=args.time_tolerance,
+                            ratio_tolerance=args.ratio_tolerance)
+    n_new = len({r["name"] for r in cur.get("rows", [])}
+                - {r["name"] for r in base.get("rows", [])})
+    if n_new:
+        print(f"[compare] {n_new} new row(s) not in the baseline (not "
+              "gated; refresh with --update to start tracking them)")
+    if problems:
+        print(f"[compare] {len(problems)} regression(s) vs "
+              f"{os.path.basename(args.baseline)}:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        print("[compare] intentional? refresh with `python -m "
+              "benchmarks.compare --update` and commit, or push with "
+              "[bench-baseline] in the commit message", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[compare] gate passed: {len(base.get('rows', []))} baseline "
+          f"row(s) within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,7 @@ from .points import x_complex, x_equal
 from .poly import (ChebyshevBasis, LagrangeBasis, MonomialBasis,
                    chebyshev_roots)
 from .registry import (CODE_NAMES, make_code, make_code_from_spec,
-                       paper_fig3a_codes)
+                       paper_fig3a_codes, restrict_code)
 from .simulate import (BatchErrorCurves, ErrorCurves, ProblemContext,
                        SimulationEngine, average_curves,
                        average_curves_reference, correlated_problem,
@@ -40,7 +40,8 @@ __all__ = [
     "CDCCode", "DecodeInfo", "MatDotCode", "EpsApproxMatDotCode",
     "OrthoMatDotCode", "LagrangeCode", "GroupSACCode", "LayerSACCode",
     "group_thresholds", "clustered_points", "make_code", "CODE_NAMES",
-    "paper_fig3a_codes", "x_equal", "x_complex", "split_contraction",
+    "paper_fig3a_codes", "restrict_code", "x_equal", "x_complex",
+    "split_contraction",
     "block_outer_products", "thm1_beta", "thm1_moments", "thm2_beta",
     "thm2_gammas", "group_beta", "layer_beta", "eq5_beta",
     "extraction_weights", "extraction_weights_batch", "fit_coefficients",

@@ -10,7 +10,7 @@ from .codes.matdot import EpsApproxMatDotCode, MatDotCode
 from .codes.orthomatdot import OrthoMatDotCode
 from .points import x_complex
 
-__all__ = ["make_code", "make_code_from_spec", "CODE_NAMES",
+__all__ = ["make_code", "make_code_from_spec", "restrict_code", "CODE_NAMES",
            "paper_fig3a_codes"]
 
 CODE_NAMES = ("matdot", "eps_matdot", "orthomatdot", "lagrange",
@@ -49,6 +49,65 @@ def make_code_from_spec(spec, *, rng: np.random.Generator | None = None):
     eval_points = kw.pop("eval_points", None)
     return make_code(spec.family, spec.K, spec.N, eval_points=eval_points,
                      rng=rng, **kw)
+
+
+def restrict_code(code, N_prime: int):
+    """The code ``code`` deployed on its first ``N_prime`` encode shards.
+
+    The elastic-fleet primitive: the returned code has ``N = N_prime`` and
+    evaluation points ``code.eval_points[:N_prime]``, so its shards are
+    *exactly* the first ``N_prime`` shards of the original — serving it on a
+    shrunk fleet is bit-identical to serving the original code with
+    ``MasterScheduler.set_fleet(N_prime)`` (the property
+    ``tests/test_design.py`` pins per family).  ``decode_basis`` is carried
+    over from the original: bases whose conditioning scale derives from the
+    point set (column scaling, mapped-Chebyshev spans) must not be refitted
+    to the truncated points, or the extraction weights drift.
+
+    Raises :class:`ValueError` where the family cannot shrink that far
+    (below the recovery threshold, or an L-SAC truncation that empties a
+    cluster).
+    """
+    N_prime = int(N_prime)
+    if not 1 <= N_prime <= code.N:
+        raise ValueError(f"need 1 <= N_prime <= N={code.N}, got {N_prime}")
+    if N_prime == code.N:
+        return code
+    pts = code.eval_points[:N_prime]
+    try:
+        if isinstance(code, GroupSACCode):
+            new = GroupSACCode(code.K, N_prime, pts, code.group_sizes,
+                               permutation=code.permutation)
+        elif isinstance(code, LayerSACCode):
+            n_sizes = np.bincount(code.cluster[:N_prime],
+                                  minlength=code.K)
+            if np.any(n_sizes <= 0):
+                raise ValueError(
+                    f"truncating {code.name} to N={N_prime} empties "
+                    f"cluster(s) {np.nonzero(n_sizes == 0)[0].tolist()}; "
+                    f"smallest supported fleet is "
+                    f"N={code.N - int(code.n_sizes[-1]) + 1}")
+            new = LayerSACCode(code.K, N_prime, base=code.base,
+                               n_sizes=n_sizes, eps=code.eps,
+                               anchors=code.anchors)
+            # clustered_points re-spreads offsets for the truncated cluster
+            # sizes; the restricted code's shards must be the original ones
+            new.eval_points = pts
+            new.cluster = code.cluster[:N_prime].copy()
+        elif isinstance(code, LagrangeCode):
+            new = LagrangeCode(code.K, N_prime, pts, anchors=code.anchors)
+        elif isinstance(code, (MatDotCode, OrthoMatDotCode)):
+            # EpsApproxMatDotCode subclasses MatDotCode: same signature
+            new = type(code)(code.K, N_prime, pts)
+        else:
+            raise ValueError(f"don't know how to restrict "
+                             f"{type(code).__name__}")
+    except ValueError as e:
+        raise ValueError(f"cannot restrict {code!r} to N={N_prime}: "
+                         f"{e}") from e
+    if hasattr(code, "decode_basis"):
+        new.decode_basis = code.decode_basis
+    return new
 
 
 def paper_fig3a_codes(K: int = 8, N: int = 24):

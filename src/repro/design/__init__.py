@@ -14,9 +14,15 @@ This subsystem automates the choice:
 * :class:`ParetoSearch` — batched-engine sweep returning the (error at
   deadline, time-to-accuracy, worker cost) frontier, with dominance pruning
   and (spec, profile)-keyed result caching.
-* :class:`AdaptivePolicy` — the serving hook: refit the profile online
-  every W requests and switch the scheduler to the frontier pick for the
-  operator's accuracy/deadline target.
+* :class:`AdaptivePolicy` — the serving hook: refit the profile online and
+  switch the scheduler to the frontier pick for the operator's
+  accuracy/deadline target.  Elastic-fleet extensions: drift-triggered
+  refits (:mod:`repro.design.drift` — windowed two-sample KS or
+  Page–Hinkley instead of a fixed refit cadence), per-:class:`RequestClass`
+  profiles (heterogeneous job shapes get separate fits and picks),
+  cost-aware fleet sizing (``best_for_target``: the smallest dispatched N
+  meeting the target), and JSON persistence (:mod:`repro.design.state`) so
+  restarts skip the cold-start window.
 
 Quickstart::
 
@@ -30,13 +36,18 @@ Quickstart::
 
 Serving integration: ``python -m repro.launch.serve --autotune``.
 """
+from .drift import (DriftReport, KSDriftDetector, PageHinkleyDetector,
+                    make_drift_detector)
 from .pareto import DesignPoint, ParetoSearch, pareto_frontier
-from .policy import AdaptivePolicy, RetuneEvent
+from .policy import AdaptivePolicy, RequestClass, RetuneEvent
 from .profile import GeneratorProfile, StragglerProfile
 from .space import CodeSpace, CodeSpec, default_spec, group_compositions
+from .state import load_state, save_state
 
 __all__ = [
     "CodeSpec", "CodeSpace", "default_spec", "group_compositions",
     "StragglerProfile", "GeneratorProfile", "DesignPoint", "ParetoSearch",
-    "pareto_frontier", "AdaptivePolicy", "RetuneEvent",
+    "pareto_frontier", "AdaptivePolicy", "RetuneEvent", "RequestClass",
+    "DriftReport", "KSDriftDetector", "PageHinkleyDetector",
+    "make_drift_detector", "save_state", "load_state",
 ]

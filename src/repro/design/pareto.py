@@ -42,6 +42,11 @@ class DesignPoint:
     cost: int
     reach_frac: float = 1.0        # trials whose error hit the target
     m_at_deadline: float = 0.0     # mean completions by the deadline
+    # expected worker-seconds actually burned per request: every dispatched
+    # worker runs until it finishes or the request releases its fleet (the
+    # estimate reached the target, or the deadline passed) — the cost the
+    # elastic controller trades accuracy against
+    worker_seconds: float = 0.0
 
     def objectives(self) -> tuple[float, float, float]:
         return (self.err_at_deadline, self.tta, float(self.cost))
@@ -147,13 +152,19 @@ class ParetoSearch:
         tta = t_sorted[:, -1].copy()
         reached = first_m >= 0
         tta[reached] = t_sorted[reached, first_m[reached]]
+        # fleet release time: the target being reached frees the workers
+        # early; otherwise they are held (and keep computing) to the deadline
+        release = np.where(reached, np.minimum(tta, self.deadline),
+                           self.deadline)
+        ws = np.minimum(batch.times, release[:, None]).sum(axis=1)
         return DesignPoint(
             spec=spec,
             err_at_deadline=float(err.mean()),
             tta=float(tta.mean()),
             cost=int(spec.N),
             reach_frac=float(reached.mean()),
-            m_at_deadline=float(m_dl.mean()))
+            m_at_deadline=float(m_dl.mean()),
+            worker_seconds=float(ws.mean()))
 
     # -------------------------------------------------------------- search
     def run(self) -> list[DesignPoint]:
@@ -173,3 +184,20 @@ class ParetoSearch:
         """
         points = self.run()
         return min(points, key=lambda p: (p.err_at_deadline, p.tta, p.cost))
+
+    def best_for_target(self) -> DesignPoint:
+        """The *cheapest* point meeting the accuracy target at the deadline.
+
+        Cost-aware selection over the ``N_options`` axis: among points whose
+        expected error at the deadline already meets ``target_error``, extra
+        accuracy buys nothing — prefer the smallest dispatched fleet, then
+        faster time-to-target.  When no point meets the target this reduces
+        to :meth:`best` (accuracy first: a cheap fleet that misses the
+        target is not an operating point, it is an outage).
+        """
+        meeting = [p for p in self.run()
+                   if p.err_at_deadline <= self.target_error]
+        if meeting:
+            return min(meeting,
+                       key=lambda p: (p.cost, p.tta, p.err_at_deadline))
+        return self.best()

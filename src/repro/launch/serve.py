@@ -25,10 +25,26 @@ a straggler profile from observed worker latencies, sweeps the code space
 through the batched simulation engine, and switches to the Pareto pick for
 ``--target-error`` at the tightest deadline.  The ``--code`` argument is the
 starting code only.
+
+Elastic-fleet controls on top of ``--autotune``:
+
+* ``--drift ks|page_hinkley`` — refit on detected change in the completion
+  stream instead of every fixed window (the window still gates the
+  cold-start fit).
+* ``--per-class`` — separate profiles and picks per request class
+  (rows bucket, inner dim, dtype).
+* ``--cost-aware --N-options 12,16,24`` — let the policy shrink the
+  dispatched fleet to the cheapest N meeting ``--target-error``.
+* ``--profile-state PATH`` — persist fitted profiles + sweep caches across
+  restarts (load at start when the file exists, save on exit): a restarted
+  service skips the cold-start window.
+* ``--fleet N`` — operator override: dispatch only the first N encode
+  shards of the starting code (no policy needed).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable
@@ -155,7 +171,29 @@ def main(argv=None):
     ap.add_argument("--target-error", type=float, default=1e-2,
                     help="autotune accuracy target (relative error)")
     ap.add_argument("--profile-window", type=int, default=16,
-                    help="requests between autotune profile refits")
+                    help="requests between autotune profile refits (the "
+                    "cold-start gate when --drift is set)")
+    ap.add_argument("--drift", default="none",
+                    choices=("none", "ks", "page_hinkley"),
+                    help="refit on detected completion-time drift instead "
+                    "of every fixed window")
+    ap.add_argument("--drift-alpha", type=float, default=0.01,
+                    help="KS drift test significance level")
+    ap.add_argument("--per-class", action="store_true",
+                    help="separate straggler profiles and code picks per "
+                    "request class (rows bucket, inner dim, dtype)")
+    ap.add_argument("--cost-aware", action="store_true",
+                    help="pick the cheapest fleet meeting --target-error "
+                    "instead of max accuracy at pinned N")
+    ap.add_argument("--N-options", default=None,
+                    help="comma-separated candidate fleet sizes for the "
+                    "cost axis (default: pinned --N)")
+    ap.add_argument("--profile-state", default=None, metavar="PATH",
+                    help="JSON snapshot of fitted profiles + sweep caches; "
+                    "loaded at start if present, saved on exit")
+    ap.add_argument("--fleet", type=int, default=None,
+                    help="dispatch only the first N encode shards of the "
+                    "starting code (operator override)")
     args = ap.parse_args(argv)
 
     if args.inner % args.K != 0:
@@ -176,6 +214,14 @@ def main(argv=None):
     # so the stats line only prints when caching is actually in play
     cache = DecodeWeightCache(args.cache_size) \
         if args.cache_size > 0 and args.decoder == "incremental" else None
+    for flag, name in ((args.drift != "none", "--drift"),
+                       (args.per_class, "--per-class"),
+                       (args.cost_aware, "--cost-aware"),
+                       (args.N_options is not None, "--N-options"),
+                       (args.profile_state is not None, "--profile-state")):
+        if flag and not args.autotune:
+            raise SystemExit(f"[serve] invalid arguments:\n  {name} "
+                             "requires --autotune")
     policy = None
     if args.autotune:
         if args.profile_window < 1:
@@ -183,11 +229,52 @@ def main(argv=None):
                              f"--profile-window must be >= 1; got "
                              f"{args.profile_window}")
         from repro.design import AdaptivePolicy, CodeSpace
+        N_options = None
+        if args.N_options is not None:
+            try:
+                N_options = tuple(int(x) for x in args.N_options.split(","))
+            except ValueError:
+                raise SystemExit(f"[serve] invalid arguments:\n  "
+                                 f"--N-options must be comma-separated "
+                                 f"integers; got {args.N_options!r}")
+            if any(n < 1 or n > args.N for n in N_options):
+                raise SystemExit(f"[serve] invalid arguments:\n  every "
+                                 f"--N-options entry must be in [1, --N "
+                                 f"{args.N}]; got {list(N_options)}")
+        drift = None if args.drift == "none" else args.drift
+        drift_kw = {"alpha": args.drift_alpha} if drift == "ks" else {}
         policy = AdaptivePolicy(
-            CodeSpace(args.K, args.N, beta_modes=(args.beta,)),
+            CodeSpace(args.K, args.N, beta_modes=(args.beta,),
+                      N_options=N_options),
             deadline=min(deadlines), target_error=args.target_error,
-            window=args.profile_window, seed=args.seed)
+            window=args.profile_window, seed=args.seed, drift=drift,
+            drift_kw=drift_kw, per_class=args.per_class,
+            cost_aware=args.cost_aware)
     sched = MasterScheduler(code, backend, cfg, cache, policy=policy)
+    if args.profile_state is not None and os.path.exists(args.profile_state):
+        from repro.design import load_state
+        try:
+            warm = load_state(policy, args.profile_state)
+        except (ValueError, KeyError, OSError) as e:
+            raise SystemExit(f"[serve] --profile-state "
+                             f"{args.profile_state}: {e}")
+        for cls, warm_code in warm.items():
+            sched.set_code(warm_code, cls=cls)
+        labels = [policy._state(cls).current_spec.label()
+                  for cls in warm] or ["(no pick yet)"]
+        print(f"[serve] restored profile state from {args.profile_state}: "
+              f"{len(warm)} warm pick(s) [{', '.join(labels)}] — "
+              "cold-start window skipped")
+    # after the warm restore: set_code intentionally resets the fleet cap
+    # (it was sized for the previous code), so the operator's explicit
+    # --fleet must be applied to whatever code actually starts serving
+    if args.fleet is not None:
+        try:
+            sched.set_fleet(args.fleet)
+        except ValueError as e:
+            raise SystemExit(f"[serve] invalid arguments:\n  --fleet: {e}")
+        print(f"[serve] fleet restricted to the first {args.fleet} of "
+              f"{sched.code.N} shards")
 
     rng = np.random.default_rng(args.seed)
     tune = (f" autotune(target={args.target_error:g}, "
@@ -242,14 +329,27 @@ def main(argv=None):
     if policy is not None:
         for ev in policy.history:
             mark = "switch ->" if ev.switched else "keep"
-            print(f"[serve] retune @{ev.n_seen} req "
-                  f"({ev.profile.kind} profile, ks={ev.profile.ks:.3f}): "
-                  f"{mark} {ev.point.spec.label()} "
+            cls = f" [{ev.cls.label()}]" if ev.cls is not None else ""
+            trig = f", {ev.trigger}" if ev.trigger != "window" else ""
+            print(f"[serve] retune @{ev.n_seen} req{cls} "
+                  f"({ev.profile.kind} profile, ks={ev.profile.ks:.3f}"
+                  f"{trig}): {mark} {ev.point.spec.label()} "
                   f"(E[err@{min(deadlines):g}]={ev.point.err_at_deadline:.2e},"
-                  f" tta={ev.point.tta:.2f})")
+                  f" tta={ev.point.tta:.2f}, cost={ev.point.cost})")
         if not policy.history:
-            print(f"[serve] autotune: window {args.profile_window} never "
-                  f"filled ({args.requests} requests) — no retune ran")
+            restored = any(policy._state(c).tuned for c in policy.classes())
+            if restored:
+                print("[serve] autotune: no retune fired this run "
+                      "(restored picks stayed; drift never triggered)")
+            else:
+                print(f"[serve] autotune: window {args.profile_window} "
+                      f"never filled ({args.requests} requests) — no "
+                      "retune ran")
+        if args.profile_state is not None:
+            from repro.design import save_state
+            save_state(policy, args.profile_state)
+            print(f"[serve] saved profile state to {args.profile_state} "
+                  f"({len(policy.classes())} class(es))")
 
 
 if __name__ == "__main__":

@@ -35,8 +35,15 @@ class ExecutionBackend:
 
     name = "abstract"
 
-    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
-        """Products for a batch of requests — ``(B, N, Nx, Ny)``."""
+    def batch_products(self, code: CDCCode, As, Bs,
+                       n_shards: int | None = None) -> np.ndarray:
+        """Products for a batch of requests — ``(B, n, Nx, Ny)``.
+
+        ``n_shards`` is the elastic-fleet knob: dispatch (and compute) only
+        the first ``n_shards`` encode shards instead of all ``code.N`` —
+        workers beyond never exist, and the decode path already tolerates
+        their absence.  ``None`` means the full fleet.
+        """
         raise NotImplementedError
 
     def sample_latencies(self, rng: np.random.Generator,
@@ -46,13 +53,23 @@ class ExecutionBackend:
 
     # shared host-side encode: one einsum over the stacked request blocks
     @staticmethod
-    def _encode_batch(code: CDCCode, As, Bs):
-        """``(E_A: (B,N,Nx,bz), E_B: (B,N,bz,Ny))`` for the whole batch."""
+    def _encode_batch(code: CDCCode, As, Bs, n_shards: int | None = None):
+        """``(E_A: (B,n,Nx,bz), E_B: (B,n,bz,Ny))`` for the whole batch.
+
+        With ``n_shards`` the generator rows are sliced *before* the encode
+        einsums — a shrunk fleet saves the encode work too, not just the
+        worker occupancy.
+        """
         blocks = [split_contraction(np.asarray(A), np.asarray(B), code.K)
                   for A, B in zip(As, Bs)]
         A_blocks = np.stack([ab for ab, _ in blocks])    # (B, K, Nx, bz)
         B_blocks = np.stack([bb for _, bb in blocks])    # (B, K, bz, Ny)
         G_A, G_B = code.generator()
+        if n_shards is not None:
+            if not 1 <= n_shards <= code.N:
+                raise ValueError(f"need 1 <= n_shards <= N={code.N}; got "
+                                 f"{n_shards}")
+            G_A, G_B = G_A[:n_shards], G_B[:n_shards]
         E_A = np.einsum("nk,rkij->rnij", G_A, A_blocks)
         E_B = np.einsum("nk,rkij->rnij", G_B, B_blocks)
         return E_A, E_B
@@ -75,8 +92,9 @@ class SimulatedBackend(ExecutionBackend):
         self.model = model                        # the first dispatch
         self.latency_kw = latency_kw
 
-    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
-        E_A, E_B = self._encode_batch(code, As, Bs)
+    def batch_products(self, code: CDCCode, As, Bs,
+                       n_shards: int | None = None) -> np.ndarray:
+        E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
         return np.einsum("rnij,rnjl->rnil", E_A, E_B)
 
     def sample_latencies(self, rng: np.random.Generator,
@@ -105,12 +123,13 @@ class DeviceBackend(ExecutionBackend):
                            "straggler_frac": straggler_frac,
                            "straggler_slowdown": straggler_slowdown}
 
-    def batch_products(self, code: CDCCode, As, Bs) -> np.ndarray:
+    def batch_products(self, code: CDCCode, As, Bs,
+                       n_shards: int | None = None) -> np.ndarray:
         import jax.numpy as jnp
 
         from ..kernels.coded_matmul.ops import (worker_products,
                                                 worker_products_complex)
-        E_A, E_B = self._encode_batch(code, As, Bs)
+        E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
         B, N = E_A.shape[:2]
         ea = E_A.reshape((B * N,) + E_A.shape[2:])
         eb = E_B.reshape((B * N,) + E_B.shape[2:])

@@ -97,7 +97,16 @@ class MasterScheduler:
     (:class:`repro.design.AdaptivePolicy`, duck-typed): the scheduler feeds
     it every dispatched batch's observed worker latencies and consults it
     between batches; when a refit moves the frontier pick, the scheduler
-    switches codes via :meth:`set_code` before the next dispatch.
+    switches codes via :meth:`set_code` before the next dispatch.  A policy
+    with ``per_class=True`` gets the batch's
+    :class:`~repro.design.policy.RequestClass` alongside each observation
+    and may switch codes per class (:attr:`class_codes`): heterogeneous job
+    shapes serve under separately tuned codes on one scheduler.
+
+    :meth:`set_fleet` is the elastic-fleet path: dispatch only the first
+    ``N'`` encode shards of the current code — bit-identical to serving
+    :func:`repro.core.registry.restrict_code`'s N'-worker code directly
+    (pinned by ``tests/test_design.py``).
     """
 
     def __init__(self, code: CDCCode, backend: ExecutionBackend | None = None,
@@ -116,6 +125,8 @@ class MasterScheduler:
         self._queue: deque[MatmulRequest] = deque()
         self._next_id = 0
         self._served = 0
+        self.fleet: int | None = None          # dispatched shards (None=all)
+        self.class_codes: dict = {}            # RequestClass -> code override
         self.switches: list[tuple[int, str, str]] = []
 
     # --------------------------------------------------------------- intake
@@ -145,22 +156,67 @@ class MasterScheduler:
         return len(self._queue)
 
     # ---------------------------------------------------------- code switch
-    def set_code(self, code: CDCCode) -> None:
+    def set_code(self, code: CDCCode, cls=None) -> None:
         """Switch the serving code (adaptive policy, operator override).
 
         Only called between batches — in-flight decodes always finish on the
         code that dispatched them.  The decode-weight cache needs no flush:
         entries are keyed on ``code.cache_key()``.  Queued requests must
         stay servable, so the new K is validated against the queue first.
+
+        ``cls`` scopes the switch to one request class (per-class adaptive
+        policies); ``None`` switches the default code for every class
+        without an override.
         """
-        bad = [r.req_id for r in self._queue if r.A.shape[1] % code.K != 0]
+        queued = self._queue if cls is None else \
+            [r for r in self._queue if self._class_of(r) == cls]
+        bad = [r.req_id for r in queued if r.A.shape[1] % code.K != 0]
         if bad:
             raise ValueError(
                 f"cannot switch to {code!r}: queued requests {bad} have "
                 f"inner dims not divisible by K={code.K}")
-        if code is not self.code:
-            self.switches.append((self._served, repr(self.code), repr(code)))
-        self.code = code
+        old = self._code_for(cls)
+        if code is not old:
+            self.switches.append((self._served, repr(old), repr(code)))
+        if cls is None:
+            if code is not self.code:
+                self.fleet = None          # fleet was sized for the old code
+            self.code = code
+        else:
+            self.class_codes[cls] = code
+
+    def _class_of(self, req: MatmulRequest):
+        from ..design.policy import RequestClass
+        return RequestClass.of(req.A, req.B)
+
+    def _code_for(self, cls) -> CDCCode:
+        return self.class_codes.get(cls, self.code) if cls is not None \
+            else self.code
+
+    # ---------------------------------------------------------- fleet sizing
+    def set_fleet(self, N: int | None) -> None:
+        """Dispatch only the first ``N`` encode shards of the current code.
+
+        The cost axis of the elastic controller: a deliberately shrunk
+        fleet occupies ``N`` workers instead of ``code.N``, at the price of
+        the completions that will never arrive (the decode path already
+        tolerates absent workers).  ``None`` restores the full fleet.
+        Serving with ``set_fleet(N')`` is bit-identical to serving
+        :func:`repro.core.registry.restrict_code`'s N'-worker code.
+        """
+        if N is None:
+            self.fleet = None
+            return
+        N = int(N)
+        if not 1 <= N <= self.code.N:
+            raise ValueError(f"fleet must be in [1, N={self.code.N}]; "
+                             f"got {N}")
+        if N < self.code.first_threshold:
+            raise ValueError(
+                f"fleet {N} is below the code's first threshold "
+                f"{self.code.first_threshold}: no request could ever be "
+                "answered (raise the fleet or switch codes first)")
+        self.fleet = N
 
     # ----------------------------------------------------------- event loop
     def run(self) -> list[RequestResult]:
@@ -170,6 +226,7 @@ class MasterScheduler:
         so only same-shape runs of the queue batch together.
         """
         results: list[RequestResult] = []
+        per_class = getattr(self.policy, "per_class", False)
         while self._queue:
             head = self._queue[0]
             shape = (head.A.shape, head.B.shape)
@@ -178,21 +235,35 @@ class MasterScheduler:
                    and (self._queue[0].A.shape,
                         self._queue[0].B.shape) == shape):
                 batch.append(self._queue.popleft())
-            results.extend(self._serve_batch(batch))
+            cls = self._class_of(batch[0]) \
+                if (self.policy is not None and per_class) else None
+            results.extend(self._serve_batch(batch, cls))
             self._served += len(batch)
             if self.policy is not None:
-                new_code = self.policy.maybe_retune()
+                new_code = self.policy.maybe_retune(cls) if per_class \
+                    else self.policy.maybe_retune()
                 if new_code is not None:
-                    self.set_code(new_code)
+                    self.set_code(new_code, cls=cls)
         return results
 
-    def _serve_batch(self, batch: list[MatmulRequest]) -> list[RequestResult]:
-        code, cfg = self.code, self.config
+    def _serve_batch(self, batch: list[MatmulRequest],
+                     cls=None) -> list[RequestResult]:
+        code, cfg = self._code_for(cls), self.config
+        # the elastic fleet caps the *default* code wherever it serves
+        # (including class batches that have not switched yet); a per-class
+        # override is already sized by its own spec's N
+        Nf = code.N
+        if code is self.code and self.fleet is not None:
+            Nf = min(self.fleet, code.N)
         products = self.backend.batch_products(
-            code, [r.A for r in batch], [r.B for r in batch])
-        times = self.backend.sample_latencies(self.rng, code.N)
+            code, [r.A for r in batch], [r.B for r in batch],
+            n_shards=Nf if Nf != code.N else None)
+        times = self.backend.sample_latencies(self.rng, Nf)
         if self.policy is not None:
-            self.policy.observe(times, n_requests=len(batch))
+            if getattr(self.policy, "per_class", False):
+                self.policy.observe(times, n_requests=len(batch), cls=cls)
+            else:
+                self.policy.observe(times, n_requests=len(batch))
         order = np.argsort(times, kind="stable")
         t_sorted = times[order]
 
@@ -217,9 +288,9 @@ class MasterScheduler:
                     for i in range(len(batch))]
         results = [RequestResult(r.req_id) for r in batch]
         first_t = float(t_sorted[code.first_threshold - 1]) \
-            if code.first_threshold <= code.N else None
+            if code.first_threshold <= Nf else None
         exact_t = float(t_sorted[code.recovery_threshold - 1]) \
-            if code.recovery_threshold <= code.N else None
+            if code.recovery_threshold <= Nf else None
         for res in results:
             res.ttfa = first_t
             res.t_exact = exact_t

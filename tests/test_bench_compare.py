@@ -1,0 +1,120 @@
+"""Benchmark-regression gate logic (``benchmarks/compare.py``) and the
+atomic ``BENCH_summary.json`` writer.
+
+The gate guards every future PR's perf numbers, so its own semantics are
+tier-1: regressions in gated metrics fail, improvements and noise-floor
+motion pass, dropped rows/metrics fail loudly, and machine-dependent
+timings are only gated on request.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.compare import _parse_metrics, compare_rows
+
+
+def _row(name, derived, us=100.0):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+BASE = [
+    _row("engine/total", "speedup=8.0x;trials=10"),
+    _row("fig3a/code", "first_m=8;err_m8=0.040;err_m15=2.4e-16"),
+    _row("table1/exact", "R=15;err_at_R=4.1e-18"),
+    _row("elastic/savings", "saved=2.5x;elastic_ws=12.2;elastic_err=4e-04"),
+]
+
+
+def test_parse_metrics_handles_suffixes_and_labels():
+    m = _parse_metrics("speedup=39.6x;pick=gsac[8]@0.1;hit_rate=50%;n=3")
+    assert m == {"speedup": 39.6, "hit_rate": 50.0, "n": 3.0}
+
+
+def test_identical_and_improved_runs_pass():
+    assert compare_rows(BASE, BASE, tolerance=0.2, time_tolerance=None) == []
+    better = [_row("engine/total", "speedup=12.0x;trials=10"),
+              _row("fig3a/code", "first_m=8;err_m8=0.020;err_m15=1e-16"),
+              _row("table1/exact", "R=15;err_at_R=1.0e-20"),
+              _row("elastic/savings",
+                   "saved=3.1x;elastic_ws=9.0;elastic_err=2e-04")]
+    assert compare_rows(BASE, better, tolerance=0.2,
+                        time_tolerance=None) == []
+
+
+def test_wallclock_ratio_tolerates_load_jitter_but_not_collapse():
+    # -37% on a wall-clock speedup is machine-load territory: tolerated
+    cur = [dict(r) for r in BASE]
+    cur[0] = _row("engine/total", "speedup=5.0x;trials=10")
+    assert compare_rows(BASE, cur, tolerance=0.2, time_tolerance=None) == []
+    # -62% is a collapsed optimization: fails the wider ratio tolerance
+    cur[0] = _row("engine/total", "speedup=3.0x;trials=10")
+    probs = compare_rows(BASE, cur, tolerance=0.2, time_tolerance=None)
+    assert len(probs) == 1 and "speedup" in probs[0]
+
+
+def test_error_regression_fails_but_noise_floor_passes():
+    cur = [dict(r) for r in BASE]
+    cur[1] = _row("fig3a/code", "first_m=8;err_m8=0.080;err_m15=2.4e-16")
+    probs = compare_rows(BASE, cur, tolerance=0.2, time_tolerance=None)
+    assert len(probs) == 1 and "err_m8" in probs[0]
+    # exact-recovery residuals live at the float noise floor: relative
+    # motion below 1e-12 is not a regression
+    cur2 = [dict(r) for r in BASE]
+    cur2[2] = _row("table1/exact", "R=15;err_at_R=8.8e-14")
+    assert compare_rows(BASE, cur2, tolerance=0.2, time_tolerance=None) == []
+
+
+def test_dropped_row_and_disappeared_metric_fail():
+    probs = compare_rows(BASE, BASE[:-1], tolerance=0.2, time_tolerance=None)
+    assert len(probs) == 1 and "missing" in probs[0]
+    cur = [dict(r) for r in BASE]
+    cur[3] = _row("elastic/savings", "elastic_ws=12.2;elastic_err=4e-04")
+    probs = compare_rows(BASE, cur, tolerance=0.2, time_tolerance=None)
+    assert len(probs) == 1 and "disappeared" in probs[0]
+    assert "saved" in probs[0]
+
+
+def test_timing_gate_is_opt_in():
+    slow = [dict(r, us_per_call=r["us_per_call"] * 10) for r in BASE]
+    assert compare_rows(BASE, slow, tolerance=0.2, time_tolerance=None) == []
+    probs = compare_rows(BASE, slow, tolerance=0.2, time_tolerance=2.0)
+    assert probs and all("us_per_call" in p for p in probs)
+
+
+def test_committed_baseline_is_valid_and_self_consistent():
+    """The baseline in the repo must parse and pass against itself —
+    otherwise the CI gate is wedged from the start."""
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "bench",
+                        "BENCH_baseline.json")
+    with open(path) as f:
+        baseline = json.load(f)
+    rows = baseline["rows"]
+    assert rows, "committed baseline has no rows"
+    assert compare_rows(rows, rows, tolerance=0.2, time_tolerance=None) == []
+    names = [r["name"] for r in rows]
+    assert "fleet_elastic/savings" in names     # the new benchmark is gated
+    saved = _parse_metrics(
+        next(r for r in rows if r["name"] == "fleet_elastic/savings")
+        ["derived"])["saved"]
+    assert saved >= 1.5                          # the ISSUE acceptance bar
+
+
+def test_write_bench_json_is_atomic(tmp_path, monkeypatch):
+    """A crash mid-dump must never leave a truncated artifact: the writer
+    goes through a temp file + rename."""
+    from benchmarks import common
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    monkeypatch.setattr(common, "_ROWS", [{"name": "a", "us_per_call": 1.0,
+                                           "derived": "x=1"}])
+    path = common.write_bench_json("out.json")
+    with open(path) as f:
+        assert json.load(f)["rows"][0]["name"] == "a"
+    # a payload json cannot serialize must not clobber the good artifact
+    monkeypatch.setattr(common, "_ROWS", [{"bad": object()}])
+    with pytest.raises(TypeError):
+        common.write_bench_json("out.json")
+    with open(path) as f:
+        assert json.load(f)["rows"][0]["name"] == "a"   # previous intact
+    assert [p for p in os.listdir(tmp_path)
+            if p.endswith(".tmp")] == []                # no litter either

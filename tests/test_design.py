@@ -8,17 +8,22 @@ The load-bearing pins:
   empirical CDF exactly when the parametric model cannot fit;
 * the frontier is dominance-correct on a hand-built toy;
 * an :class:`AdaptivePolicy` code switch serves bit-identically to a fresh
-  scheduler running the chosen code directly.
+  scheduler running the chosen code directly;
+* the elastic fleet: ``set_fleet(N')`` serving is bit-identical to serving
+  ``restrict_code``'s N'-worker code directly (hypothesis, every family);
+  cost-aware picks take the cheapest target-meeting fleet; policy state
+  survives a JSON round trip; drift triggers replace the fixed cadence.
 """
 import numpy as np
 import pytest
 
-from repro.core import CODE_NAMES, make_code_from_spec
+from repro.core import CODE_NAMES, make_code_from_spec, restrict_code
 from repro.core.straggler import (heterogeneous_exp_times_batch,
                                   shifted_exp_times_batch)
 from repro.design import (AdaptivePolicy, CodeSpace, CodeSpec, DesignPoint,
-                          GeneratorProfile, ParetoSearch, StragglerProfile,
-                          default_spec, group_compositions, pareto_frontier)
+                          GeneratorProfile, ParetoSearch, RequestClass,
+                          StragglerProfile, default_spec, group_compositions,
+                          pareto_frontier)
 from repro.serving import MasterScheduler, ServeConfig, SimulatedBackend
 
 K, N = 4, 12
@@ -229,3 +234,309 @@ def test_set_code_guards_queued_requests():
     sched.submit(np.zeros((4, 8)), np.zeros((8, 4)))  # inner=8: K=4 ok
     with pytest.raises(ValueError, match="not divisible"):
         sched.set_code(default_spec("matdot", 3, 12).build())
+
+
+# --------------------------------------------------------- elastic fleet
+
+def _min_restrict_N(code):
+    """Smallest N' ``restrict_code`` supports for this code."""
+    if code.name.startswith("layer_sac"):
+        return code.N - int(code.n_sizes[-1]) + 1
+    return code.recovery_threshold
+
+
+def _serve_answers(sched, reqs, seed):
+    sched.rng = np.random.default_rng(seed)
+    for A, B in reqs:
+        sched.submit(A, B)
+    out = []
+    for res in sched.run():
+        out.append((res.ttfa, res.t_exact,
+                    [(a.t, a.m, a.rel_err, a.exact, a.kind)
+                     for a in res.answers]))
+    return out
+
+
+def test_restrict_code_prefix_shards_and_validation():
+    code = default_spec("group_sac", K, N).build(np.random.default_rng(0))
+    r = restrict_code(code, 9)
+    assert (r.K, r.N) == (K, 9)
+    GA, GB = code.generator()
+    gA, gB = r.generator()
+    np.testing.assert_array_equal(GA[:9], gA)
+    np.testing.assert_array_equal(GB[:9], gB)
+    np.testing.assert_array_equal(code.eval_points[:9], r.eval_points)
+    assert restrict_code(code, code.N) is code
+    with pytest.raises(ValueError, match="N_prime"):
+        restrict_code(code, 0)
+    with pytest.raises(ValueError, match="cannot restrict"):
+        restrict_code(code, code.recovery_threshold - 1)
+    lsac = default_spec("layer_sac_ortho", K, N).build()
+    with pytest.raises(ValueError, match="empties"):
+        restrict_code(lsac, _min_restrict_N(lsac) - 1)
+
+
+def test_set_fleet_validation():
+    sched = MasterScheduler(default_spec("matdot", K, N).build())
+    with pytest.raises(ValueError, match="fleet"):
+        sched.set_fleet(N + 1)
+    with pytest.raises(ValueError, match="first threshold"):
+        sched.set_fleet(2 * K - 2)           # below R = first for matdot
+    sched.set_fleet(2 * K - 1)
+    assert sched.fleet == 2 * K - 1
+    sched.set_fleet(None)
+    assert sched.fleet is None
+
+
+@pytest.mark.parametrize("family", CODE_NAMES)
+def test_set_fleet_bit_identical_to_restricted_code(family):
+    """Property (hypothesis): dispatching only the first N' shards via
+    ``set_fleet(N')`` serves bit-identically to a scheduler running
+    ``restrict_code(code, N')`` — for every family and every supported N'.
+    """
+    st = pytest.importorskip("hypothesis.strategies")
+    hypothesis = pytest.importorskip("hypothesis")
+
+    code = default_spec(family, K, N).build(np.random.default_rng(3))
+    lo = _min_restrict_N(code)
+
+    @hypothesis.given(N_prime=st.integers(min_value=lo, max_value=N),
+                      seed=st.integers(min_value=0, max_value=2**32 - 1))
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def check(N_prime, seed):
+        cfg = ServeConfig(deadlines=(1.2, 1.8, 2.5), batch_size=2, seed=0)
+        rng = np.random.default_rng(11)
+        reqs = [(rng.standard_normal((6, 4 * K)),
+                 rng.standard_normal((4 * K, 6))) for _ in range(3)]
+
+        fleet_sched = MasterScheduler(code, SimulatedBackend(), cfg)
+        fleet_sched.set_fleet(N_prime)
+        direct_sched = MasterScheduler(restrict_code(code, N_prime),
+                                       SimulatedBackend(), cfg)
+        a = _serve_answers(fleet_sched, reqs, seed)
+        b = _serve_answers(direct_sched, reqs, seed)
+        assert a == b                         # bit-identical, incl. rel_err
+
+    check()
+
+
+def test_best_for_target_prefers_cheapest_meeting_fleet():
+    profile = GeneratorProfile("shifted_exp")
+    space = CodeSpace(K, 24, N_options=(8, 12, 24))
+    search = ParetoSearch(space, profile, deadline=3.0, target_error=1e-2,
+                          trials=32, seed=0)
+    pick = search.best_for_target()
+    assert pick.err_at_deadline <= 1e-2
+    assert pick.cost == min(p.cost for p in search.run()
+                            if p.err_at_deadline <= 1e-2)
+    assert pick.cost < search.best().cost     # strictly cheaper than pinned
+    assert pick.worker_seconds < search.best().worker_seconds
+    # unreachable target: falls back to the accuracy-first pick
+    strict = ParetoSearch(space, profile, deadline=1.01, target_error=1e-30,
+                          trials=16, seed=0)
+    assert strict.best_for_target().spec == strict.best().spec
+
+
+def test_request_class_bucketing():
+    A = np.zeros((100, 256))
+    B = np.zeros((256, 100))
+    cls = RequestClass.of(A, B)
+    assert cls == RequestClass(rows=128, inner=256, dtype="f8")
+    assert cls.label() == "128x256/f8"
+    # same bucket: pooled; different inner or dtype: split
+    assert RequestClass.of(np.zeros((65, 256)), B) == cls
+    assert RequestClass.of(A.astype(np.float32),
+                           B.astype(np.float32)) != cls
+    assert RequestClass.of(np.zeros((100, 128)),
+                           np.zeros((128, 100))) != cls
+
+
+def test_policy_per_class_keeps_separate_profiles_and_picks():
+    policy = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=4,
+                            trials=8, seed=0, per_class=True)
+    fast = RequestClass(rows=32, inner=128, dtype="f8")
+    slow = RequestClass(rows=512, inner=2048, dtype="f8")
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0], cls=fast)
+    assert policy.maybe_retune(slow) is None      # no slow-class data yet
+    code_fast = policy.maybe_retune(fast)
+    assert code_fast is not None
+    for _ in range(4):
+        policy.observe(heterogeneous_exp_times_batch(
+            rng, N, 1, slow_frac=0.5, slow_shift=6.0, slow_rate=0.2)[0],
+            cls=slow)
+    policy.maybe_retune(slow)
+    st_fast = policy._state(fast)
+    st_slow = policy._state(slow)
+    assert st_fast.current_spec is not None
+    assert st_slow.current_point is not None
+    # the two classes were fitted on their own observations
+    assert st_fast.search.profile.cache_key() != \
+        st_slow.search.profile.cache_key()
+    assert {ev.cls for ev in policy.history} == {fast, slow}
+    assert policy.classes() == [fast, slow]
+
+
+def test_policy_drift_trigger_replaces_fixed_cadence():
+    policy = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=4,
+                            trials=8, seed=0, drift="ks",
+                            drift_kw={"alpha": 0.01, "min_rows": 4})
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    policy.maybe_retune()                         # cold-start fit (window)
+    assert [ev.trigger for ev in policy.history] == ["window"]
+    # stationary stream: windows elapse, no further refits
+    for _ in range(12):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+        assert policy.maybe_retune() is None
+    assert len(policy.history) == 1
+    # regime change: the drift trigger fires a refit
+    fired = False
+    for _ in range(12):
+        policy.observe(shifted_exp_times_batch(rng, N, 1, shift=4.0,
+                                               rate=0.3)[0])
+        if policy.maybe_retune() is not None or \
+                policy.history[-1].trigger == "drift":
+            fired = True
+            break
+    assert fired
+    ev = policy.history[-1]
+    assert ev.trigger == "drift" and ev.drift is not None
+    assert ev.drift.drifted
+
+
+def test_policy_state_roundtrip_warm_restart(tmp_path):
+    from repro.design import load_state, save_state
+    make = lambda: AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5,
+                                  target_error=1e-2, window=4, trials=8,
+                                  seed=0, drift="ks")
+    policy = make()
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        policy.observe(heterogeneous_exp_times_batch(
+            rng, N, 1, slow_frac=0.3, slow_shift=4.0, slow_rate=0.3)[0])
+    policy.maybe_retune()
+    assert policy.current_spec is not None
+    path = tmp_path / "state.json"
+    save_state(policy, str(path))
+
+    restored = make()
+    warm = load_state(restored, str(path))
+    # the restored policy serves the same pick without any observations
+    assert restored.current_spec == policy.current_spec
+    assert restored._state(None).tuned
+    assert None in warm
+    assert warm[None].cache_key() == \
+        policy.current_spec.build(
+            rng=np.random.default_rng([0, 0x5AC])).cache_key()
+    # restored sweep cache hits on the next retune with the same profile
+    assert restored._search is not None
+    assert restored._search.profile.cache_key() == \
+        policy._search.profile.cache_key()
+    assert len(restored._search._cache) == len(policy._search._cache)
+    # version guard: a stale snapshot is refused loudly
+    bad = dict(restored.state_dict(), version=999)
+    with pytest.raises(ValueError, match="version"):
+        restored.load_state_dict(bad)
+    wrong_k = AdaptivePolicy(CodeSpace.tiny(3, 12), deadline=1.5, window=4)
+    with pytest.raises(ValueError, match="K="):
+        load_state(wrong_k, str(path))
+
+
+def test_drift_retune_fits_on_recent_window_not_stale_history():
+    """A drift-triggered refit must fit the *new* regime: the observation
+    buffer is trimmed to the detector window, or hundreds of pre-change
+    rows would average the drift away and re-pick the old code."""
+    policy = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=4,
+                            trials=8, seed=0, drift="ks",
+                            drift_kw={"alpha": 0.01, "min_rows": 4,
+                                      "window": 8})
+    rng = np.random.default_rng(9)
+    for _ in range(4):
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    policy.maybe_retune()                          # cold-start fit
+    for _ in range(60):                            # long stable history
+        policy.observe(shifted_exp_times_batch(rng, N, 1)[0])
+        assert policy.maybe_retune() is None
+    assert len(policy._state(None).times) == 64
+    for _ in range(60):                            # regime change
+        policy.observe(shifted_exp_times_batch(rng, N, 1, shift=4.0,
+                                               rate=0.3)[0])
+        policy.maybe_retune()
+    drift_events = [ev for ev in policy.history if ev.trigger == "drift"]
+    assert drift_events
+    # every drift refit fitted on at most the detector window of rows —
+    # not the 64-row stale history
+    assert all(ev.profile.n_obs <= 8 * N for ev in drift_events)
+    # and the refits converge onto the new regime (the first may still mix
+    # in pre-change rows when detection beats the window, but detection
+    # keeps firing against the mixed reference until the fit catches up):
+    # the final drift fit's generative mean is the slow fleet's (~7.3),
+    # not the stale one's (~2.0)
+    p = drift_events[-1].profile
+    mean = (float(p.sample.mean()) if p.kind == "empirical"
+            else p.shift + 1.0 / p.rate)
+    assert mean > 3.5
+    # once converged, the detector quiesces: no endless retune churn
+    assert len(drift_events) <= 4
+
+
+def test_restore_without_detector_state_falls_back_to_window_cadence():
+    """A snapshot saved without --drift restored into a --drift run leaves
+    the detector un-armed; refits must fall back to the window cadence
+    instead of waiting forever on a detector that can never fire."""
+    plain = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=4,
+                           trials=8, seed=0)
+    rng = np.random.default_rng(12)
+    for _ in range(4):
+        plain.observe(shifted_exp_times_batch(rng, N, 1)[0])
+    plain.maybe_retune()
+    drifty = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=4,
+                            trials=8, seed=0, drift="ks")
+    drifty.load_state_dict(plain.state_dict())
+    assert drifty._state(None).tuned
+    assert not drifty._state(None).detector.has_reference
+    retuned = False
+    for _ in range(8):
+        drifty.observe(shifted_exp_times_batch(rng, N, 1, shift=5.0)[0])
+        if drifty.maybe_retune() is not None or \
+                drifty.history and drifty.history[-1].trigger == "window":
+            retuned = True
+            break
+    assert retuned, "un-armed detector permanently disabled refits"
+    # the window refit armed the detector: drift mode takes over
+    assert drifty._state(None).detector.has_reference
+
+
+def test_per_class_snapshot_pools_into_shared_policy_by_evidence():
+    """Restoring a per-class snapshot without --per-class must merge the
+    counters and adopt the *best-evidenced* class's pick, not whichever
+    entry happened to be serialized last."""
+    per = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=2,
+                         trials=8, seed=0, per_class=True)
+    heavy = RequestClass(rows=128, inner=256, dtype="f8")
+    light = RequestClass(rows=16, inner=64, dtype="f8")
+    rng = np.random.default_rng(13)
+    for _ in range(10):
+        per.observe(shifted_exp_times_batch(rng, N, 1)[0], cls=heavy)
+    per.maybe_retune(heavy)
+    for _ in range(2):
+        per.observe(heterogeneous_exp_times_batch(
+            rng, N, 1, slow_frac=0.5, slow_shift=8.0, slow_rate=0.1)[0],
+            cls=light)
+    per.maybe_retune(light)
+    assert per._state(heavy).seen == 10 and per._state(light).seen == 2
+
+    pooled = AdaptivePolicy(CodeSpace.tiny(K, N), deadline=1.5, window=2,
+                            trials=8, seed=0)
+    warm = pooled.load_state_dict(per.state_dict())
+    st = pooled._state(None)
+    assert st.seen == 12                      # counters add up
+    assert st.tuned
+    # the profile/pick come from the 10-observation class, not the 2-obs one
+    assert st.search.profile.cache_key() == \
+        per._state(heavy).search.profile.cache_key()
+    assert st.current_spec == per._state(heavy).current_spec
+    assert set(warm) == {None}
