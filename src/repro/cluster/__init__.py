@@ -1,0 +1,39 @@
+"""Asynchronous cluster runtime: real worker pools behind the serving stack.
+
+Until this package, every serving backend *modeled* its completion process
+(shifted-exponential draws on a simulated clock).  The cluster runtime
+executes encode shards on real OS processes and feeds the serving loop
+*measured* completion events:
+
+* :mod:`~repro.cluster.worker`  — worker processes (shared-memory operand
+  transfer, injectable chaos: sleep jitter / slow hosts / crash / hang).
+* :mod:`~repro.cluster.pool`    — :class:`WorkerPool`: ``acquire``/
+  ``release`` with warm spares, liveness reaping, dead-worker replacement —
+  the elastic controller's scale-*out* path.
+* :mod:`~repro.cluster.events`  — live :class:`ShardEvent` stream +
+  :class:`TraceRecording` record/replay (cluster runs replay bit-identical
+  through the simulated path).
+* :mod:`~repro.cluster.backend` — :class:`ClusterBackend` (live dispatch for
+  ``AsyncMasterScheduler``, classic two-call protocol for the simulated
+  scheduler) and :class:`ReplayBackend`.
+
+``worker`` is the multiprocessing spawn target, so this module stays
+importable without jax; the backend (which pulls in the serving package) is
+loaded lazily.
+"""
+from .events import BatchRecord, ShardEvent, TraceRecording
+from .pool import WorkerHandle, WorkerPool
+from .worker import ChaosSpec, WorkerPlan, worker_main
+
+__all__ = [
+    "ShardEvent", "BatchRecord", "TraceRecording",
+    "WorkerPool", "WorkerHandle", "ChaosSpec", "WorkerPlan", "worker_main",
+    "ClusterBackend", "ClusterDispatch", "ReplayBackend",
+]
+
+
+def __getattr__(name):
+    if name in ("ClusterBackend", "ClusterDispatch", "ReplayBackend"):
+        from . import backend
+        return getattr(backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,328 @@
+"""Cluster execution backend: measured completions from real worker pools.
+
+This closes the seam ``serving/backends.py`` documented since PR 2 —
+"real clusters would report completions; here the seam is where those
+reports would plug in".  :class:`ClusterBackend` dispatches each encoded
+shard to one process of a :class:`~repro.cluster.pool.WorkerPool` (operands
+via shared memory), and the completion *times* the serving loop walks are
+measured on the master as each product arrives, not drawn from a model.
+
+Two consumption modes:
+
+* **live** — :meth:`ClusterBackend.dispatch_batch` returns a
+  :class:`ClusterDispatch` whose :meth:`~ClusterDispatch.next_event` stream
+  feeds ``serving.master.AsyncMasterScheduler``: decoders update as shards
+  arrive, answers emit mid-batch.
+* **sync** — the classic :meth:`batch_products` / ``sample_latencies``
+  backend protocol still works (dispatch, drain everything, return the
+  product stack + the observed times), so a plain ``MasterScheduler`` can
+  serve from the cluster too.
+
+:class:`ReplayBackend` replays a :class:`~repro.cluster.events.TraceRecording`
+through the simulated product path — the record/replay fixture that pins the
+cluster decode outputs bit-identical to the simulated ones.
+"""
+from __future__ import annotations
+
+import queue as queue_mod
+import time
+from multiprocessing import shared_memory
+
+import numpy as np
+
+from ..serving.backends import ExecutionBackend, SimulatedBackend
+from .events import BatchRecord, ShardEvent, TraceRecording
+from .pool import WorkerPool
+
+__all__ = ["ClusterBackend", "ClusterDispatch", "ReplayBackend"]
+
+_POLL = 0.02          # result-queue wait chunk: bounds reap/abandon latency
+
+
+def _to_shm(arr: np.ndarray) -> tuple[shared_memory.SharedMemory, tuple]:
+    """Copy ``arr`` into a fresh shared-memory block; returns (block, meta)."""
+    arr = np.ascontiguousarray(arr)
+    shm = shared_memory.SharedMemory(create=True, size=arr.nbytes)
+    np.ndarray(arr.shape, dtype=arr.dtype, buffer=shm.buf)[:] = arr
+    return shm, (shm.name, arr.shape, arr.dtype.str)
+
+
+class ClusterDispatch:
+    """One in-flight batch: pending shards, live events, measured times.
+
+    Event timestamps are seconds since dispatch, taken at the instant the
+    master drains the result (so processing order *is* timestamp order) and
+    nudged strictly increasing — a replayed ``argsort`` reconstructs the
+    exact arrival sequence, which is what makes record/replay bit-identical.
+    """
+
+    def __init__(self, backend: "ClusterBackend", E_A: np.ndarray,
+                 E_B: np.ndarray):
+        self.backend = backend
+        self.pool = backend.pool
+        self.n_shards = int(E_A.shape[1])
+        self.batch_id = backend._next_batch_id()
+        self.workers = self.pool.lease(self.n_shards)
+        self._shm_a, a_meta = _to_shm(E_A)
+        self._shm_b, b_meta = _to_shm(E_B)
+        self._out_shape = (E_A.shape[0], E_A.shape[2], E_B.shape[3])
+        self._out_dtype = np.result_type(E_A.dtype, E_B.dtype)
+        self.pending: dict[int, int] = {}         # shard -> worker id
+        self.times: dict[int, float] = {}
+        self.lost: dict[int, str] = {}
+        self.products: dict[int, np.ndarray] = {}
+        self._losses: list[ShardEvent] = []
+        self._last_t = 0.0
+        self.abandon_at: float | None = None
+        self._finalized = False
+        self._t0 = time.monotonic()
+        for shard in range(self.n_shards):
+            wid = self.workers[shard]
+            self.pending[shard] = wid
+            if not self.pool.send(
+                    wid, ("task", self.batch_id, shard, a_meta, b_meta)):
+                self._mark_lost(shard, "dispatch")
+
+    # ------------------------------------------------------------------ time
+    def elapsed(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _stamp(self) -> float:
+        """Strictly-increasing arrival timestamp (see class docstring)."""
+        t = self.elapsed()
+        if t <= self._last_t:
+            t = float(np.nextafter(self._last_t, np.inf))
+        self._last_t = t
+        return t
+
+    # ------------------------------------------------------------ event pump
+    @property
+    def outstanding(self) -> int:
+        return len(self.pending)
+
+    def set_abandon(self, t: float | None) -> None:
+        """Abandon still-pending shards once ``elapsed() >= t`` (hang bound)."""
+        self.abandon_at = None if t is None else float(t)
+
+    def _mark_lost(self, shard: int, reason: str) -> None:
+        wid = self.pending.pop(shard)
+        self.pool.mark_done(wid, self.batch_id, shard)
+        t = self._stamp()
+        self.lost[shard] = reason
+        self._losses.append(ShardEvent(kind="lost", shard=shard, t=t,
+                                       worker=wid, reason=reason))
+
+    def _sweep(self) -> None:
+        """Reap crashed workers; abandon everything past the hang bound."""
+        for wid, lost_shards in self.pool.reap(replace=True):
+            for batch_id, shard in lost_shards:
+                if batch_id == self.batch_id and shard in self.pending:
+                    self._mark_lost(shard, "crash")
+        if self.abandon_at is not None and self.elapsed() >= self.abandon_at:
+            for shard in sorted(self.pending):
+                wid = self.pending[shard]
+                # retire before clearing the in-flight bookkeeping: the
+                # pool's shards_lost counter reads the worker's busy set
+                self.pool.retire(wid, "timeout")
+                self._mark_lost(shard, "timeout")
+
+    def next_event(self, timeout: float | None = None) -> ShardEvent | None:
+        """The next live event (``done`` or ``lost``), or ``None`` on timeout.
+
+        Blocks at most ``timeout`` seconds (``None``: until the next event
+        or the abandon bound).  Crashed workers surface as ``lost`` events
+        from the periodic reap sweep, so a dead process can never wedge the
+        stream.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._losses:
+                return self._losses.pop(0)
+            if not self.pending:
+                return None
+            self._sweep()
+            if self._losses:
+                return self._losses.pop(0)
+            left = _POLL if deadline is None \
+                else min(_POLL, deadline - time.monotonic())
+            if left <= 0:
+                return None
+            try:
+                msg = self.pool.results.get(timeout=left)
+            except queue_mod.Empty:
+                continue
+            if msg[0] == "pong":
+                continue
+            _, wid, batch_id, shard, P = msg
+            self.pool.mark_done(wid, batch_id, shard)
+            if batch_id != self.batch_id or shard not in self.pending:
+                continue                  # stale result of an abandoned batch
+            del self.pending[shard]
+            t = self._stamp()
+            self.times[shard] = t
+            self.products[shard] = P
+            return ShardEvent(kind="done", shard=shard, t=t, worker=wid,
+                              products=P)
+
+    def drain(self, timeout: float) -> None:
+        """Pump events until nothing is pending (bounded by ``timeout``)."""
+        if self.abandon_at is None:
+            self.set_abandon(self.elapsed() + timeout)
+        while self.pending or self._losses:
+            if self.next_event(timeout=_POLL) is None and not self.pending:
+                break
+
+    # -------------------------------------------------------------- teardown
+    def record(self) -> BatchRecord:
+        return BatchRecord(n_shards=self.n_shards, times=dict(self.times),
+                           lost=dict(self.lost))
+
+    def latency_row(self) -> np.ndarray:
+        """Measured per-shard times (``inf`` where the shard never arrived)."""
+        return self.record().latency_row()
+
+    def product_stack(self) -> np.ndarray:
+        """``(B, n_shards, Nx, Ny)`` stack; lost shards are zero-filled.
+
+        Zeros are safe placeholders: a lost shard's time is ``inf``, so no
+        decode state the event loop reaches ever reads its product.
+        """
+        B, Nx, Ny = self._out_shape
+        out = np.zeros((B, self.n_shards, Nx, Ny), dtype=self._out_dtype)
+        for shard, P in self.products.items():
+            out[:, shard] = P
+        return out
+
+    def finalize(self) -> BatchRecord:
+        """Release the batch's shared memory and record its completion trace."""
+        if self._finalized:
+            return self.record()
+        self._finalized = True
+        for shm in (self._shm_a, self._shm_b):
+            shm.close()
+            shm.unlink()
+        rec = self.record()
+        if self.backend.recording is not None:
+            self.backend.recording.append(rec)
+        return rec
+
+
+class ClusterBackend(ExecutionBackend):
+    """Products from a real worker pool; latencies *measured*, not modeled.
+
+    ``workers`` is the starting fleet, ``spares`` the warm-spare budget,
+    ``chaos`` the injected perturbation spec (see
+    :class:`~repro.cluster.worker.ChaosSpec`).  ``grace`` bounds how long a
+    live dispatch waits for stragglers past its last deadline before
+    abandoning them (the hang bound); ``sync_timeout`` bounds the blocking
+    :meth:`batch_products` path.  ``record=True`` keeps a
+    :class:`~repro.cluster.events.TraceRecording` of every batch for replay.
+    """
+
+    name = "cluster"
+
+    def __init__(self, *, workers: int = 4, spares: int = 0,
+                 chaos=None, seed: int = 0, record: bool = False,
+                 grace: float = 2.0, sync_timeout: float = 60.0,
+                 start_method: str = "spawn", pool: WorkerPool | None = None):
+        if grace <= 0 or sync_timeout <= 0:
+            raise ValueError("grace and sync_timeout must be > 0")
+        self.pool = pool if pool is not None else WorkerPool(
+            workers, spares=spares, chaos=chaos, seed=seed,
+            start_method=start_method)
+        self._owns_pool = pool is None
+        self.grace = float(grace)
+        self.sync_timeout = float(sync_timeout)
+        self.recording: TraceRecording | None = \
+            TraceRecording() if record else None
+        self._batch_counter = 0
+        self._last_times: np.ndarray | None = None
+
+    def _next_batch_id(self) -> int:
+        self._batch_counter += 1
+        return self._batch_counter
+
+    # ------------------------------------------------------------- live path
+    def dispatch_batch(self, code, As, Bs,
+                       n_shards: int | None = None) -> ClusterDispatch:
+        """Encode the batch and fan its shards out to the pool — live handle.
+
+        The pool is right-sized to the shard count: a code (or fleet cap)
+        larger than the current fleet *acquires* workers — the scale-out
+        path — and a smaller one releases them into warm spares.
+        """
+        E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
+        return ClusterDispatch(self, E_A, E_B)
+
+    # ------------------------------------------------- classic backend seam
+    def batch_products(self, code, As, Bs,
+                       n_shards: int | None = None) -> np.ndarray:
+        """Blocking dispatch: drain every shard, then return the stack.
+
+        The measured completion times are kept for the paired
+        :meth:`sample_latencies` call, preserving the two-call backend
+        protocol the simulated scheduler drives.
+        """
+        d = self.dispatch_batch(code, As, Bs, n_shards)
+        d.drain(self.sync_timeout)
+        self._last_times = d.latency_row()
+        out = d.product_stack()
+        d.finalize()
+        return out
+
+    def sample_latencies(self, rng: np.random.Generator,
+                         N: int) -> np.ndarray:
+        """Observed times of the last dispatched batch (``rng`` unused).
+
+        Real completions are measured, not drawn — the seam the simulated
+        backends documented.  Lost shards report ``inf``: they never arrive.
+        """
+        if self._last_times is None or len(self._last_times) != N:
+            raise ValueError(
+                "no measured latencies for this fleet size; "
+                "batch_products must run first (the cluster backend "
+                "measures times, it cannot sample them)")
+        return self._last_times
+
+    # -------------------------------------------------------------- teardown
+    def close(self) -> None:
+        if self._owns_pool:
+            self.pool.shutdown()
+
+    def __enter__(self) -> "ClusterBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ReplayBackend(SimulatedBackend):
+    """Replay a recorded cluster trace through the simulated product path.
+
+    Products come from the *same* encode + contraction as the cluster
+    workers (bit-identical on the same host — pinned), and
+    ``sample_latencies`` replays the measured per-shard times batch by
+    batch.  Serving a replay therefore reproduces a cluster run exactly,
+    which is both the equivalence fixture and a debugging tool (re-serve a
+    production trace under a different decoder/cache configuration).
+    """
+
+    name = "replay"
+
+    def __init__(self, recording: TraceRecording, **sim_kw):
+        super().__init__(**sim_kw)
+        self.recording = recording
+        self._cursor = 0
+
+    def sample_latencies(self, rng: np.random.Generator,
+                         N: int) -> np.ndarray:
+        if self._cursor >= len(self.recording.batches):
+            raise ValueError(f"trace exhausted after "
+                             f"{len(self.recording.batches)} batches")
+        rec = self.recording.batches[self._cursor]
+        self._cursor += 1
+        if rec.n_shards != N:
+            raise ValueError(f"recorded batch {self._cursor} has "
+                             f"{rec.n_shards} shards, fleet wants {N} — "
+                             "replay must use the recording's code/fleet")
+        return rec.latency_row()

@@ -1,0 +1,124 @@
+"""Completion events and record/replay traces for the cluster runtime.
+
+The simulated serving path owns a *modeled* completion process: one latency
+draw per dispatched batch, walked by ``merged_event_stream``.  The cluster
+runtime replaces the draw with measured events — each worker's product
+arrives on the master's result queue and is timestamped on arrival — but
+keeps the stream contract identical: events are strictly ordered in time,
+deadline ticks fire after any completion sharing their timestamp, and the
+estimate a client reads at ``t`` includes every shard that completed by
+``t``.
+
+:class:`ShardEvent` is one element of that live stream (a completed shard
+carrying its product stack, or a lost shard — crashed or abandoned worker).
+:class:`TraceRecording` captures the measured per-shard completion times of
+every dispatched batch so a cluster run can be *replayed* through the
+simulated backend: same products, same completion times, bit-identical
+decode outputs (pinned by ``tests/test_cluster.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["ShardEvent", "BatchRecord", "TraceRecording"]
+
+
+@dataclass(frozen=True)
+class ShardEvent:
+    """One element of a live completion stream.
+
+    ``kind`` is ``"done"`` (``products`` holds the shard's ``(B, Nx, Ny)``
+    stack over the batch) or ``"lost"`` (``reason``: ``"crash"`` — the
+    worker process died, ``"timeout"`` — the shard was abandoned past the
+    hang deadline, ``"dispatch"`` — the task could not be delivered).
+    ``t`` is seconds since the batch was dispatched, strictly increasing
+    within a batch so replayed event order is exactly arrival order.
+    """
+
+    kind: str                     # "done" | "lost"
+    shard: int                    # encode-shard index (the code's worker id)
+    t: float                      # seconds since dispatch
+    worker: int                   # pool worker id that held the shard
+    products: np.ndarray | None = None     # (B, Nx, Ny) for "done"
+    reason: str | None = None              # for "lost"
+
+
+@dataclass
+class BatchRecord:
+    """Measured completion process of one dispatched batch."""
+
+    n_shards: int
+    times: dict[int, float] = field(default_factory=dict)   # shard -> t
+    lost: dict[int, str] = field(default_factory=dict)      # shard -> reason
+
+    def latency_row(self) -> np.ndarray:
+        """Per-shard completion times; lost shards never complete (``inf``).
+
+        This is exactly the row a ``sample_latencies`` replay hands the
+        event loop: ``merged_event_stream`` sorts the finite times into the
+        measured arrival order (times are strictly increasing at the
+        recorder) and pushes the ``inf`` entries past every deadline.
+        """
+        row = np.full(self.n_shards, np.inf)
+        for shard, t in self.times.items():
+            row[int(shard)] = float(t)
+        return row
+
+    def to_dict(self) -> dict:
+        return {"n_shards": int(self.n_shards),
+                "times": {str(k): float(v) for k, v in self.times.items()},
+                "lost": {str(k): str(v) for k, v in self.lost.items()}}
+
+    @staticmethod
+    def from_dict(d: dict) -> "BatchRecord":
+        return BatchRecord(
+            n_shards=int(d["n_shards"]),
+            times={int(k): float(v) for k, v in d.get("times", {}).items()},
+            lost={int(k): str(v) for k, v in d.get("lost", {}).items()})
+
+
+@dataclass
+class TraceRecording:
+    """Ordered batch records of one cluster serving run (JSON round-trip).
+
+    ``ReplayBackend`` consumes the records in dispatch order; the schema is
+    versioned so a stale file fails loudly instead of replaying garbage.
+    """
+
+    batches: list[BatchRecord] = field(default_factory=list)
+
+    VERSION = 1
+
+    def append(self, record: BatchRecord) -> None:
+        self.batches.append(record)
+
+    def __len__(self) -> int:
+        return len(self.batches)
+
+    def to_dict(self) -> dict:
+        return {"version": self.VERSION, "kind": "cluster-trace",
+                "batches": [b.to_dict() for b in self.batches]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "TraceRecording":
+        if not isinstance(d, dict):
+            raise ValueError("not a cluster trace recording")
+        if d.get("kind") != "cluster-trace":
+            raise ValueError("not a cluster trace recording")
+        if d.get("version") != TraceRecording.VERSION:
+            raise ValueError(f"trace version {d.get('version')!r} != "
+                             f"{TraceRecording.VERSION}")
+        return TraceRecording(batches=[BatchRecord.from_dict(b)
+                                       for b in d.get("batches", [])])
+
+    def save(self, path: str) -> str:
+        from ..ioutil import write_json_atomic
+        return write_json_atomic(path, self.to_dict(), indent=2)
+
+    @staticmethod
+    def load(path: str) -> "TraceRecording":
+        import json
+        with open(path) as f:
+            return TraceRecording.from_dict(json.load(f))

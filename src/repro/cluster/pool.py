@@ -1,0 +1,355 @@
+"""Worker pool: acquisition, warm spares, liveness, dead-worker replacement.
+
+The ROADMAP's missing "worker acquisition story": the elastic controller
+could always *shrink* the dispatched fleet below the starting ``--N``, but
+growing past it needed somewhere for the extra workers to come from.
+:class:`WorkerPool` is that somewhere — a supervisor over real OS processes
+(:func:`~repro.cluster.worker.worker_main`):
+
+* :meth:`acquire` / :meth:`release` — lease workers into the active fleet
+  and return them; released workers stay warm as spares up to the
+  configured budget (a later ``acquire`` reuses them without paying process
+  startup), beyond it they are shut down.
+* :meth:`lease` — the dispatch-path wrapper: rightsize the active fleet to
+  exactly ``n`` workers (acquiring or releasing as needed) and return the
+  shard → worker assignment.
+* :meth:`reap` — liveness sweep: dead processes (crashed workers) are
+  detected, their in-flight shards reported lost, and replacements spawned
+  so the fleet heals to its leased size.
+* :meth:`heartbeat` — active ping over the task pipes (a stuck-but-alive
+  worker answers ``is_alive()`` yet never a ping); safe between batches.
+
+Workers are daemon processes: a wedged master can die without leaving
+orphans, and CI jobs cannot be held hostage by a hung worker.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as queue_mod
+import time
+from dataclasses import dataclass, field
+
+from .worker import ChaosSpec, worker_main
+
+__all__ = ["WorkerPool", "WorkerHandle"]
+
+_JOIN_TIMEOUT = 2.0
+
+
+@dataclass
+class WorkerHandle:
+    """Supervisor-side state of one worker process."""
+
+    wid: int
+    proc: object
+    conn: object                          # master end of the task pipe
+    busy: set = field(default_factory=set)   # in-flight (batch_id, shard)
+    ready: bool = False                   # startup handshake received
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def poll_ready(self, timeout: float = 0.0) -> bool:
+        """Consume the worker's startup handshake if it has arrived."""
+        if self.ready:
+            return True
+        try:
+            if self.conn.poll(timeout):
+                msg = self.conn.recv()
+                if msg[0] == "ready":
+                    self.ready = True
+        except (EOFError, OSError):
+            pass                          # died during startup; reap handles
+        return self.ready
+
+
+class WorkerPool:
+    """A supervised fleet of worker processes with warm spares.
+
+    ``workers`` processes are spawned up front (the starting fleet);
+    ``spares`` is the warm-spare budget kept alive after releases.  ``chaos``
+    is a :class:`~repro.cluster.worker.ChaosSpec` or its string form —
+    perturbation plans are assigned by worker id at spawn, so runs are
+    reproducible.  ``start_method`` defaults to ``"spawn"`` (fork is unsafe
+    once jax threads exist in the master).
+    """
+
+    def __init__(self, workers: int = 0, *, spares: int = 0,
+                 chaos: ChaosSpec | str | None = None, seed: int = 0,
+                 start_method: str = "spawn", ready_timeout: float = 60.0):
+        if workers < 0 or spares < 0:
+            raise ValueError(f"need workers >= 0 and spares >= 0; got "
+                             f"{workers}, {spares}")
+        self.ready_timeout = float(ready_timeout)
+        self.chaos = chaos if isinstance(chaos, ChaosSpec) \
+            else ChaosSpec.parse(chaos)
+        self.seed = int(seed)
+        self.target_spares = int(spares)
+        self._ctx = mp.get_context(start_method)
+        self.results = self._ctx.Queue()
+        self._active: dict[int, WorkerHandle] = {}
+        self._spares: list[WorkerHandle] = []
+        self._next_id = 0
+        self._closed = False
+        self.stats = {"spawned": 0, "replaced": 0, "retired": 0,
+                      "crashed": 0, "acquired": 0, "released": 0,
+                      "shards_lost": 0}
+        if workers:
+            self.acquire(workers)
+
+    # ---------------------------------------------------------------- sizing
+    @property
+    def active(self) -> list[int]:
+        """Leased worker ids in lease order (shard n runs on ``active[n]``)."""
+        return list(self._active)
+
+    @property
+    def size(self) -> int:
+        return len(self._active)
+
+    @property
+    def spares(self) -> int:
+        return len(self._spares)
+
+    def _spawn(self) -> WorkerHandle:
+        wid = self._next_id
+        self._next_id += 1
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=worker_main,
+            args=(wid, child_conn, self.results,
+                  self.chaos.plan_for(wid), self.seed),
+            daemon=True, name=f"sac-worker-{wid}")
+        proc.start()
+        child_conn.close()
+        self.stats["spawned"] += 1
+        return WorkerHandle(wid=wid, proc=proc, conn=parent_conn)
+
+    def acquire(self, n: int) -> list[int]:
+        """Lease ``n`` more workers into the active fleet; returns their ids.
+
+        Warm spares are reused first (no process startup), the rest are
+        spawned.  This is the scale-*out* path: nothing bounds the fleet to
+        the starting size.
+        """
+        if n < 0:
+            raise ValueError(f"acquire needs n >= 0; got {n}")
+        self._check_open()
+        out = []
+        for _ in range(n):
+            while self._spares:
+                h = self._spares.pop()
+                if h.alive():
+                    break
+                self._scrap(h)
+            else:
+                h = self._spawn()
+            self._active[h.wid] = h
+            out.append(h.wid)
+        self.stats["acquired"] += len(out)
+        return out
+
+    def release(self, wids) -> None:
+        """Return leased workers; keep up to ``spares`` warm, retire the rest."""
+        for wid in list(wids):
+            h = self._active.pop(int(wid), None)
+            if h is None:
+                continue
+            self.stats["released"] += 1
+            if h.alive() and len(self._spares) < self.target_spares:
+                self._spares.append(h)
+            else:
+                self._shutdown_handle(h)
+
+    def lease(self, n: int) -> list[int]:
+        """Rightsize the active fleet to exactly ``n`` and return it in order.
+
+        The dispatch-path entry point: a grown fleet acquires (spares first),
+        a shrunk one releases from the tail (warm spares keep the release
+        cheap to undo).  Dead actives are replaced first, and the lease only
+        returns once every worker has completed its startup handshake — so
+        the dispatch clock (wall-clock deadlines!) never pays for process
+        spawn time.
+        """
+        if n < 1:
+            raise ValueError(f"lease needs n >= 1; got {n}")
+        self.reap(replace=True)
+        if len(self._active) < n:
+            self.acquire(n - len(self._active))
+        elif len(self._active) > n:
+            self.release(self.active[n:])
+        self.wait_ready(timeout=self.ready_timeout)
+        return self.active
+
+    def wait_ready(self, timeout: float = 30.0) -> bool:
+        """Block until every active worker reported its startup handshake.
+
+        Workers that die during startup are replaced (one healing pass) and
+        the replacements awaited too; returns ``False`` if anything is
+        still silent at the timeout — callers treat the silent workers like
+        any other straggler (their shards simply never arrive).
+        """
+        deadline = time.monotonic() + timeout
+        for attempt in range(2):
+            all_ready = True
+            for h in list(self._active.values()):
+                while not h.poll_ready(0.0):
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not h.alive():
+                        all_ready = False
+                        break
+                    h.poll_ready(min(left, 0.05))
+            if all_ready:
+                return True
+            if attempt == 0 and not self.reap(replace=True):
+                break                      # silent but alive: nothing to heal
+        return all(h.ready for h in self._active.values())
+
+    # -------------------------------------------------------------- liveness
+    def reap(self, replace: bool = True) -> list[tuple[int, set]]:
+        """Sweep for dead workers; returns ``[(wid, lost_shards), ...]``.
+
+        A dead *active* worker is replaced in place (same lease slot, fresh
+        process with a fresh id) when ``replace`` — the pool heals to its
+        leased size, and the caller learns which in-flight ``(batch, shard)``
+        pairs died with the process.  Dead spares are silently scrapped.
+        """
+        self._check_open()
+        dead = []
+        for wid, h in list(self._active.items()):
+            if h.alive():
+                continue
+            dead.append((wid, set(h.busy)))
+            self.stats["crashed"] += 1
+            self.stats["shards_lost"] += len(h.busy)
+            self._scrap(h)
+            if replace:
+                nh = self._spawn()
+                self._replace_slot(wid, nh)
+                self.stats["replaced"] += 1
+            else:
+                del self._active[wid]
+        self._spares = [h for h in self._spares
+                        if h.alive() or self._scrap(h)]
+        return dead
+
+    def _replace_slot(self, old_wid: int, nh: WorkerHandle) -> None:
+        """Put ``nh`` into ``old_wid``'s *position* of the lease order.
+
+        Shard n runs on ``active[n]``, and the empirical straggler profile
+        bootstraps per-shard column marginals — so a replacement must keep
+        the dead worker's slot, not shift every later worker one shard over.
+        """
+        self._active = {(nh.wid if wid == old_wid else wid):
+                        (nh if wid == old_wid else h)
+                        for wid, h in self._active.items()}
+
+    def retire(self, wid: int, reason: str = "retired") -> None:
+        """Kill and replace one active worker (hung past its deadline)."""
+        h = self._active.get(int(wid))
+        if h is None:
+            return
+        self.stats["retired"] += 1
+        self.stats["shards_lost"] += len(h.busy)
+        h.proc.kill()
+        self._scrap(h, join=True)
+        self._replace_slot(int(wid), self._spawn())
+        self.stats["replaced"] += 1
+
+    def heartbeat(self, timeout: float = 2.0) -> dict[int, float]:
+        """Ping every idle active worker; returns ``{wid: rtt_seconds}``.
+
+        Only safe between batches: pongs arrive on the shared result queue,
+        so a concurrent dispatch would have its completions drained here.
+        Busy/hung workers simply do not answer — absence from the returned
+        dict *is* the signal.
+        """
+        self._check_open()
+        token = time.monotonic_ns()
+        idle = [h for h in self._active.values() if not h.busy and h.alive()]
+        t0 = time.monotonic()
+        for h in idle:
+            try:
+                h.conn.send(("ping", token))
+            except (BrokenPipeError, OSError):
+                pass
+        out: dict[int, float] = {}
+        deadline = t0 + timeout
+        while len(out) < len(idle):
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            try:
+                msg = self.results.get(timeout=left)
+            except queue_mod.Empty:
+                break
+            if msg[0] == "pong" and msg[2] == token:
+                out[msg[1]] = time.monotonic() - t0
+        return out
+
+    # ------------------------------------------------------------- transport
+    def send(self, wid: int, msg) -> bool:
+        """Deliver one task message; ``False`` when the pipe is already dead."""
+        h = self._active.get(int(wid))
+        if h is None:
+            return False
+        try:
+            h.conn.send(msg)
+        except (BrokenPipeError, OSError):
+            return False
+        if msg[0] == "task":
+            h.busy.add((msg[1], msg[2]))
+        return True
+
+    def mark_done(self, wid: int, batch_id: int, shard: int) -> None:
+        h = self._active.get(int(wid))
+        if h is not None:
+            h.busy.discard((batch_id, shard))
+
+    # -------------------------------------------------------------- shutdown
+    def _scrap(self, h: WorkerHandle, join: bool = False) -> bool:
+        try:
+            h.conn.close()
+        except OSError:
+            pass
+        if join:
+            h.proc.join(_JOIN_TIMEOUT)
+        return False          # so reap's filter-expression can call it
+
+    def _shutdown_handle(self, h: WorkerHandle) -> None:
+        try:
+            h.conn.send(("shutdown",))
+        except (BrokenPipeError, OSError):
+            pass
+        h.proc.join(_JOIN_TIMEOUT)
+        if h.proc.is_alive():
+            h.proc.kill()
+            h.proc.join(_JOIN_TIMEOUT)
+        self._scrap(h)
+
+    def shutdown(self) -> None:
+        """Stop every worker (active + spares); idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        for h in [*self._active.values(), *self._spares]:
+            self._shutdown_handle(h)
+        self._active.clear()
+        self._spares.clear()
+        self.results.cancel_join_thread()
+        self.results.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("pool is shut down")
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def __repr__(self):
+        return (f"WorkerPool(active={self.size}, spares={self.spares}, "
+                f"spawned={self.stats['spawned']}, "
+                f"replaced={self.stats['replaced']})")

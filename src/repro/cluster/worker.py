@@ -1,0 +1,216 @@
+"""Worker processes: shared-memory shard compute + injectable chaos.
+
+A worker is one OS process in a :class:`~repro.cluster.pool.WorkerPool`.
+It blocks on its task pipe, and for every ``("task", ...)`` message attaches
+the batch's shared-memory operand blocks, computes its encode shard's
+product stack for the whole request batch, and puts the result on the
+pool's shared result queue.  The perturbation layer runs *before* the
+compute, so injected chaos shapes the completion-time process the master
+observes — reproducible straggler/crash/hang scenarios on a real fleet:
+
+* ``sleep:LO:HI``   — per-task uniform jitter in ``[LO, HI]`` seconds (every
+  worker; the baseline latency spread).
+* ``slow:C:DELAY``  — ``C`` designated slow workers add ``DELAY`` seconds per
+  task (persistent stragglers — bad hosts).
+* ``crash:C``       — ``C`` designated workers exit hard on their first task
+  (the in-flight shard is lost; the pool replaces the process).
+* ``hang:C``        — ``C`` designated workers sleep forever on their first
+  task (liveness says healthy, the shard never arrives — only a master-side
+  deadline catches it).
+
+Designation is deterministic: the first ``crash`` worker ids crash, the next
+``hang`` ids hang, the next ``slow`` ids are slow.  Replacement workers get
+fresh ids past the doomed ranges, so a replaced crasher serves correctly —
+exactly the recovery story the chaos tests pin.
+
+This module is the spawn target, so it keeps its imports to numpy + stdlib:
+child startup must not pay for jax.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["ChaosSpec", "WorkerPlan", "worker_main"]
+
+_HANG_SECONDS = 1e6
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """Parsed ``--chaos`` configuration (see module docstring for kinds)."""
+
+    sleep: tuple[float, float] | None = None
+    crash: int = 0
+    hang: int = 0
+    slow: int = 0
+    slow_delay: float = 0.0
+
+    @staticmethod
+    def parse(text: str | None) -> "ChaosSpec":
+        """``"crash:1,sleep:0.01:0.05,slow:3:0.4"`` → :class:`ChaosSpec`.
+
+        Unknown kinds and malformed parameters raise with the valid
+        vocabulary — a typo'd chaos flag must fail at the CLI, not silently
+        run a clean fleet.
+        """
+        if not text:
+            return ChaosSpec()
+        kw: dict = {}
+        for part in str(text).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            kind, *params = part.split(":")
+            try:
+                if kind == "sleep":
+                    if len(params) == 1:
+                        kw["sleep"] = (0.0, float(params[0]))
+                    else:
+                        lo, hi = map(float, params)
+                        kw["sleep"] = (lo, hi)
+                elif kind == "crash":
+                    (kw["crash"],) = map(int, params)
+                elif kind == "hang":
+                    (kw["hang"],) = map(int, params)
+                elif kind == "slow":
+                    count, delay = params
+                    kw["slow"] = int(count)
+                    kw["slow_delay"] = float(delay)
+                else:
+                    raise ValueError(
+                        f"unknown chaos kind {kind!r} in {part!r}; valid: "
+                        "sleep:LO:HI, slow:COUNT:DELAY, crash:COUNT, "
+                        "hang:COUNT")
+            except (TypeError, ValueError) as e:
+                if "unknown chaos kind" in str(e):
+                    raise
+                raise ValueError(f"malformed chaos entry {part!r}: {e}") \
+                    from None
+        spec = ChaosSpec(**kw)
+        if spec.crash < 0 or spec.hang < 0 or spec.slow < 0:
+            raise ValueError(f"chaos counts must be >= 0; got {spec}")
+        if spec.sleep is not None and not 0 <= spec.sleep[0] <= spec.sleep[1]:
+            raise ValueError(f"need 0 <= sleep LO <= HI; got {spec.sleep}")
+        return spec
+
+    def plan_for(self, worker_id: int) -> "WorkerPlan":
+        """The deterministic perturbation plan of one worker id."""
+        wid = int(worker_id)
+        crash = wid < self.crash
+        hang = self.crash <= wid < self.crash + self.hang
+        slow = self.crash + self.hang <= wid < \
+            self.crash + self.hang + self.slow
+        return WorkerPlan(sleep=self.sleep, crash=crash, hang=hang,
+                          slow_delay=self.slow_delay if slow else 0.0)
+
+
+@dataclass(frozen=True)
+class WorkerPlan:
+    """One worker's resolved perturbations (picklable, numpy-free)."""
+
+    sleep: tuple[float, float] | None = None
+    crash: bool = False
+    hang: bool = False
+    slow_delay: float = 0.0
+
+
+def _attach_shm(name: str):
+    """Attach an existing shared-memory block without tracker registration.
+
+    On CPython < 3.13 every attach registers the segment with the process's
+    resource tracker, which then tries to unlink it at exit — double-free
+    noise (and, worst case, destruction of a segment the master still owns:
+    bpo-38119).  The master created the segment and owns its lifecycle; the
+    worker only reads it, so the attach is untracked.
+    """
+    from multiprocessing import resource_tracker, shared_memory
+    orig = resource_tracker.register
+
+    def _skip_shm(rname, rtype):
+        if rtype != "shared_memory":
+            orig(rname, rtype)
+
+    resource_tracker.register = _skip_shm
+    try:
+        return shared_memory.SharedMemory(name=name)
+    finally:
+        resource_tracker.register = orig
+
+
+def _shard_products(task) -> np.ndarray:
+    """The shard's ``(B, Nx, Ny)`` product stack from shared-memory operands.
+
+    The einsum is the *same contraction on the same memory layout* as the
+    simulated backend's full-batch ``"rnij,rnjl->rnil"`` (a width-1 slice of
+    the worker axis), so a recorded cluster run replayed through
+    ``SimulatedBackend`` reproduces bit-identical products — the
+    record/replay equivalence ``tests/test_cluster.py`` pins.
+    """
+    (_, _, shard, (a_name, a_shape, a_dtype),
+     (b_name, b_shape, b_dtype)) = task
+    shm_a = _attach_shm(a_name)
+    shm_b = _attach_shm(b_name)
+    try:
+        E_A = np.ndarray(a_shape, dtype=np.dtype(a_dtype), buffer=shm_a.buf)
+        E_B = np.ndarray(b_shape, dtype=np.dtype(b_dtype), buffer=shm_b.buf)
+        n = int(shard)
+        P = np.einsum("rnij,rnjl->rnil",
+                      E_A[:, n:n + 1], E_B[:, n:n + 1])[:, 0]
+        return np.ascontiguousarray(P)
+    finally:
+        shm_a.close()
+        shm_b.close()
+
+
+def worker_main(worker_id: int, conn, result_q, plan: WorkerPlan,
+                seed: int) -> None:
+    """Worker process entry point: serve tasks until ``("shutdown",)``.
+
+    Messages on ``conn``:
+
+    * ``("task", batch_id, shard, a_meta, b_meta)`` — compute the shard
+      product stack, reply ``("done", worker_id, batch_id, shard, P)`` on
+      the result queue (chaos permitting).
+    * ``("ping", token)`` — reply ``("pong", worker_id, token, t)``
+      (heartbeat liveness).
+    * ``("shutdown",)`` — exit cleanly.
+
+    The jitter rng is seeded on ``(seed, worker_id)`` so a chaos run is
+    reproducible per worker identity.
+    """
+    rng = np.random.default_rng([int(seed), int(worker_id), 0xC1A0])
+    try:
+        conn.send(("ready", int(worker_id)))     # startup handshake: the
+    except (BrokenPipeError, OSError):           # pool's lease() blocks on
+        return                                   # this before dispatching
+    first_task = True
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return                       # master went away
+        kind = msg[0]
+        if kind == "shutdown":
+            return
+        if kind == "ping":
+            result_q.put(("pong", int(worker_id), msg[1], time.monotonic()))
+            continue
+        if kind != "task":
+            continue                     # unknown message: ignore, stay up
+        if first_task:
+            first_task = False
+            if plan.crash:
+                os._exit(13)             # hard death: no cleanup, no reply
+            if plan.hang:
+                time.sleep(_HANG_SECONDS)
+        delay = plan.slow_delay
+        if plan.sleep is not None:
+            delay += float(rng.uniform(plan.sleep[0], plan.sleep[1]))
+        if delay > 0:
+            time.sleep(delay)
+        P = _shard_products(msg)
+        result_q.put(("done", int(worker_id), int(msg[1]), int(msg[2]), P))

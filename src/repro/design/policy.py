@@ -27,6 +27,13 @@ Elastic-fleet extensions on top of the PR-3 fixed-window policy:
   dispatched fleet (over the space's ``N_options``) whose expected error at
   the deadline already meets the target, instead of max accuracy at pinned
   N.
+* **Drift-aware scale-out** — with ``scale_out=True`` a drift-triggered
+  refit whose fitted tail *worsened* (expected latency up more than
+  ``scale_threshold``) may request a **larger** fleet instead of only
+  switching codes: the pick jumps to the cheapest larger-N point meeting
+  the target (``trigger="drift-scale-out"`` in the history).  With the
+  cluster backend the extra workers are real — the pool acquires them at
+  the next dispatch.
 * **Persistence** — :meth:`state_dict` / :meth:`load_state_dict` (JSON-safe
   via :mod:`repro.design.state`) snapshot fitted profiles, picks, and sweep
   caches so a restarted service skips the cold-start window.
@@ -108,6 +115,8 @@ class _ClassState:
     current_point: DesignPoint | None = None
     search: ParetoSearch | None = None
     detector: object = None
+    last_profile: StragglerProfile | None = None   # the previous fit (the
+    #                                                scale-out comparator)
 
 
 class AdaptivePolicy:
@@ -127,7 +136,8 @@ class AdaptivePolicy:
                  trials: int = 48, seed: int = 0, buffer: int = 1024,
                  profile_kind: str = "auto", switch_margin: float = 0.05,
                  drift: str | None = None, drift_kw: dict | None = None,
-                 per_class: bool = False, cost_aware: bool = False):
+                 per_class: bool = False, cost_aware: bool = False,
+                 scale_out: bool = False, scale_threshold: float = 0.1):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         if not 0.0 <= switch_margin < 1.0:
@@ -148,6 +158,8 @@ class AdaptivePolicy:
             make_drift_detector(drift, **self.drift_kw)
         self.per_class = bool(per_class)
         self.cost_aware = bool(cost_aware)
+        self.scale_out = bool(scale_out)
+        self.scale_threshold = float(scale_threshold)
         self._classes: dict[RequestClass | None, _ClassState] = {}
         self.history: list[RetuneEvent] = []
 
@@ -239,15 +251,25 @@ class AdaptivePolicy:
             search._cache.update(st.search._cache)
         st.search = search
         best = self._pick(search)
-        switched = best.spec != st.current_spec
-        if switched and st.current_spec is not None:
-            # switch hysteresis: near-ties flip-flop with profile noise, and
-            # every flip invalidates warm state downstream — only move when
-            # the candidate beats the incumbent by the margin (same profile,
-            # same shared traces: a paired comparison)
-            incumbent = search.evaluate(st.current_spec)
-            if not self._beats_incumbent(best, incumbent):
-                best, switched = incumbent, False
+        scaled = self._scale_out_pick(st, search, profile, trigger, best)
+        if scaled is not None:
+            # drift worsened the tail and no pick meets the target at the
+            # current fleet: request a larger one.  Hysteresis is skipped —
+            # holding an undersized fleet to avoid churn is the one move
+            # that is always wrong here
+            best, trigger = scaled, "drift-scale-out"
+            switched = best.spec != st.current_spec
+        else:
+            switched = best.spec != st.current_spec
+            if switched and st.current_spec is not None:
+                # switch hysteresis: near-ties flip-flop with profile noise,
+                # and every flip invalidates warm state downstream — only
+                # move when the candidate beats the incumbent by the margin
+                # (same profile, same shared traces: a paired comparison)
+                incumbent = search.evaluate(st.current_spec)
+                if not self._beats_incumbent(best, incumbent):
+                    best, switched = incumbent, False
+        st.last_profile = profile
         st.tuned = True
         if st.detector is not None:
             st.detector.rebase()       # drift is measured against this fit
@@ -260,6 +282,48 @@ class AdaptivePolicy:
             return None
         st.current_spec = best.spec
         return best.spec.build(rng=np.random.default_rng([self.seed, 0x5AC]))
+
+    def _scale_out_pick(self, st: _ClassState, search: ParetoSearch,
+                        profile: StragglerProfile, trigger: str,
+                        best: DesignPoint) -> DesignPoint | None:
+        """Drift-aware scale-*up*: a larger fleet for a worsened tail.
+
+        Fires only when (a) ``scale_out`` is on, (b) the refit was drift-
+        triggered, (c) the new profile's expected latency worsened by more
+        than ``scale_threshold`` over the previous fit, and (d) the normal
+        pick misses the accuracy target.  The request is then the cheapest
+        point *above the incumbent fleet size* that meets the target — or,
+        when none does, the larger-fleet point closest to it.  Either way
+        the candidate must beat the *incumbent spec at its current fleet*
+        strictly on error: more workers must buy accuracy, so a fleet where
+        every size fails identically (e.g. err 1.0 across the board) never
+        ratchets upward on repeated drift hits.  The serving side honors
+        the request through the worker pool: the scheduler switches to the
+        bigger-N code and the cluster backend acquires the extra workers at
+        the next dispatch.
+        """
+        if not (self.scale_out and trigger == "drift"
+                and st.last_profile is not None
+                and st.current_point is not None
+                and st.current_spec is not None):
+            return None
+        worsened = profile.expected_latency() > \
+            (1.0 + self.scale_threshold) * st.last_profile.expected_latency()
+        if not worsened or best.err_at_deadline <= self.target_error:
+            return None
+        larger = [p for p in search.run() if p.cost > st.current_point.cost]
+        if not larger:
+            return None
+        meeting = [p for p in larger
+                   if p.err_at_deadline <= self.target_error]
+        cand = min(meeting,
+                   key=lambda p: (p.cost, p.tta, p.err_at_deadline)) \
+            if meeting else min(larger,
+                                key=lambda p: (p.err_at_deadline, p.tta,
+                                               p.cost))
+        incumbent = search.evaluate(st.current_spec)
+        return cand if cand.err_at_deadline < incumbent.err_at_deadline \
+            else None
 
     def _beats_incumbent(self, cand: DesignPoint,
                          inc: DesignPoint) -> bool:

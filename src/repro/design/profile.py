@@ -144,6 +144,14 @@ class StragglerProfile:
         return CompletionBatch(orders=np.argsort(t, axis=1, kind="stable"),
                                times=t)
 
+    def expected_latency(self) -> float:
+        """``E[t]`` under the fitted model — the scalar the scale-out hook
+        compares across refits (``shift + 1/rate`` parametrically, the
+        sample mean empirically)."""
+        if self.kind == "empirical" and self.sample is not None:
+            return float(np.mean(self.sample))
+        return float(self.shift + 1.0 / self.rate)
+
     # ----------------------------------------------------------- identity
     def cache_key(self) -> tuple:
         """Hashable identity for (spec, profile)-keyed sweep caches."""

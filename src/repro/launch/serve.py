@@ -40,6 +40,23 @@ Elastic-fleet controls on top of ``--autotune``:
   service skips the cold-start window.
 * ``--fleet N`` — operator override: dispatch only the first N encode
   shards of the starting code (no policy needed).
+
+Cluster runtime (``--backend cluster``): shards execute on a real worker
+pool (:mod:`repro.cluster`) and completion times are *measured* — deadlines
+become wall-clock seconds from dispatch.  ``--workers`` is the starting
+fleet (the pool acquires more whenever the serving code needs them — the
+scale-out path), ``--spares`` keeps warm spares after releases, ``--chaos``
+injects reproducible perturbations (``sleep:LO:HI``, ``slow:C:DELAY``,
+``crash:C``, ``hang:C``), ``--record PATH`` saves the measured completion
+trace, and ``--replay PATH`` re-serves a recorded trace through the
+simulated product path (bit-identical decode outputs).  With ``--autotune
+--scale-out``, a drift-detected tail worsening lets the policy *grow* the
+fleet (``--N-options`` entries above ``--N`` are allowed on the cluster
+backend)::
+
+    PYTHONPATH=src python -m repro.launch.serve --backend cluster \
+        --code matdot --K 2 --N 4 --workers 4 --spares 1 \
+        --chaos crash:1,sleep:0.01:0.05 --requests 4 --rows 16 --inner 64
 """
 from __future__ import annotations
 
@@ -53,8 +70,9 @@ import numpy as np
 
 from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
                         MatDotCode, x_complex)
-from repro.serving import (DecodeWeightCache, MasterScheduler, ServeConfig,
-                           make_backend, serve_request)
+from repro.serving import (AsyncMasterScheduler, DecodeWeightCache,
+                           MasterScheduler, ServeConfig, make_backend,
+                           serve_request)
 
 __all__ = ["CODES", "build_code", "validate_args", "serve_request", "main"]
 
@@ -161,10 +179,32 @@ def main(argv=None):
                     choices=("incremental", "recompute"),
                     help="streaming decoder or the per-tick re-decode "
                     "baseline")
-    ap.add_argument("--backend", default="sim", choices=("sim", "device"),
-                    help="simulated numpy workers or the jax device kernels")
+    ap.add_argument("--backend", default="sim",
+                    choices=("sim", "device", "cluster"),
+                    help="simulated numpy workers, the jax device kernels, "
+                    "or a real multiprocess worker pool")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="cluster: starting worker-pool size (grows on "
+                    "demand — the scale-out path)")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="cluster: warm spare workers kept after releases")
+    ap.add_argument("--chaos", default=None,
+                    help="cluster: injected perturbations, e.g. "
+                    "'crash:1,sleep:0.01:0.05,slow:2:0.3,hang:1'")
+    ap.add_argument("--grace", type=float, default=2.0,
+                    help="cluster: seconds past the last deadline before "
+                    "pending shards are abandoned (hang bound)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="cluster: save the measured completion trace as "
+                    "JSON for --replay")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="re-serve a recorded cluster trace through the "
+                    "simulated product path (bit-identical decode)")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="decode-weight LRU entries (0 disables)")
+    ap.add_argument("--class-cache", type=int, default=0,
+                    help="per-request-class decode-weight sub-budget "
+                    "(entries per class; 0 = one shared LRU)")
     ap.add_argument("--autotune", action="store_true",
                     help="refit a straggler profile online and switch to "
                     "the Pareto-optimal code for the accuracy target")
@@ -185,6 +225,10 @@ def main(argv=None):
     ap.add_argument("--cost-aware", action="store_true",
                     help="pick the cheapest fleet meeting --target-error "
                     "instead of max accuracy at pinned N")
+    ap.add_argument("--scale-out", action="store_true",
+                    help="let a drift-detected tail worsening request a "
+                    "larger fleet (with --backend cluster the pool "
+                    "acquires the workers)")
     ap.add_argument("--N-options", default=None,
                     help="comma-separated candidate fleet sizes for the "
                     "cost axis (default: pinned --N)")
@@ -205,18 +249,51 @@ def main(argv=None):
                          f"be >= 1; got {args.batch_size}")
     code = build_code(args.code, args.K, args.N)
     deadlines = tuple(float(x) for x in args.deadlines.split(","))
-    backend = make_backend(args.backend,
-                           straggler_frac=args.straggler_frac)
+    for flag, name in ((args.chaos is not None, "--chaos"),
+                       (args.record is not None, "--record"),
+                       (args.spares != 0, "--spares")):
+        if flag and args.backend != "cluster":
+            raise SystemExit(f"[serve] invalid arguments:\n  {name} "
+                             "requires --backend cluster")
+    if args.replay is not None:
+        if args.backend != "sim":
+            raise SystemExit(f"[serve] invalid arguments:\n  --replay "
+                             f"re-serves the trace through the simulated "
+                             f"product path; drop --backend {args.backend}")
+        from repro.cluster import TraceRecording
+        try:
+            recording = TraceRecording.load(args.replay)
+        except (OSError, ValueError, KeyError) as e:
+            raise SystemExit(f"[serve] --replay {args.replay}: {e}")
+        backend = make_backend("replay", recording=recording)
+    elif args.backend == "cluster":
+        try:
+            backend = make_backend(
+                "cluster", workers=args.workers, spares=args.spares,
+                chaos=args.chaos, seed=args.seed,
+                record=args.record is not None, grace=args.grace)
+        except ValueError as e:
+            raise SystemExit(f"[serve] invalid arguments:\n  {e}")
+    else:
+        backend = make_backend(args.backend,
+                               straggler_frac=args.straggler_frac)
     cfg = ServeConfig(deadlines=deadlines, stream=args.stream,
                       batch_size=args.batch_size, beta_mode=args.beta,
                       decoder=args.decoder, seed=args.seed)
+    if args.class_cache < 0:
+        raise SystemExit(f"[serve] invalid arguments:\n  --class-cache "
+                         f"must be >= 0; got {args.class_cache}")
     # the recompute baseline never consults the cache — don't create one,
     # so the stats line only prints when caching is actually in play
-    cache = DecodeWeightCache(args.cache_size) \
+    cache = DecodeWeightCache(args.cache_size,
+                              class_budget=args.class_cache or None,
+                              track_classes=args.class_cache > 0
+                              or args.per_class) \
         if args.cache_size > 0 and args.decoder == "incremental" else None
     for flag, name in ((args.drift != "none", "--drift"),
                        (args.per_class, "--per-class"),
                        (args.cost_aware, "--cost-aware"),
+                       (args.scale_out, "--scale-out"),
                        (args.N_options is not None, "--N-options"),
                        (args.profile_state is not None, "--profile-state")):
         if flag and not args.autotune:
@@ -237,10 +314,20 @@ def main(argv=None):
                 raise SystemExit(f"[serve] invalid arguments:\n  "
                                  f"--N-options must be comma-separated "
                                  f"integers; got {args.N_options!r}")
-            if any(n < 1 or n > args.N for n in N_options):
+            # the cluster backend has a worker acquisition story, so fleet
+            # candidates above the starting --N are servable (the pool
+            # grows); modeled backends stay bounded by the starting fleet
+            if args.backend == "cluster":
+                if any(n < 1 for n in N_options):
+                    raise SystemExit(f"[serve] invalid arguments:\n  every "
+                                     f"--N-options entry must be >= 1; got "
+                                     f"{list(N_options)}")
+            elif any(n < 1 or n > args.N for n in N_options):
                 raise SystemExit(f"[serve] invalid arguments:\n  every "
                                  f"--N-options entry must be in [1, --N "
-                                 f"{args.N}]; got {list(N_options)}")
+                                 f"{args.N}] on backend {args.backend!r} "
+                                 f"(only the cluster backend can acquire "
+                                 f"workers past --N); got {list(N_options)}")
         drift = None if args.drift == "none" else args.drift
         drift_kw = {"alpha": args.drift_alpha} if drift == "ks" else {}
         policy = AdaptivePolicy(
@@ -249,8 +336,10 @@ def main(argv=None):
             deadline=min(deadlines), target_error=args.target_error,
             window=args.profile_window, seed=args.seed, drift=drift,
             drift_kw=drift_kw, per_class=args.per_class,
-            cost_aware=args.cost_aware)
-    sched = MasterScheduler(code, backend, cfg, cache, policy=policy)
+            cost_aware=args.cost_aware, scale_out=args.scale_out)
+    sched_cls = AsyncMasterScheduler if args.backend == "cluster" \
+        else MasterScheduler
+    sched = sched_cls(code, backend, cfg, cache, policy=policy)
     if args.profile_state is not None and os.path.exists(args.profile_state):
         from repro.design import load_state
         try:
@@ -280,10 +369,15 @@ def main(argv=None):
     tune = (f" autotune(target={args.target_error:g}, "
             f"window={args.profile_window}, "
             f"space={len(policy.space)})" if policy else "")
+    extra = ""
+    if args.backend == "cluster":
+        extra = (f" workers={args.workers} spares={args.spares} "
+                 f"chaos={args.chaos or 'none'} (deadlines are wall-clock "
+                 "seconds)")
     print(f"[serve] code={args.code} K={args.K} N={args.N} "
           f"R={code.recovery_threshold} first={code.first_threshold} "
           f"straggler_frac={args.straggler_frac} decoder={args.decoder} "
-          f"backend={args.backend} batch={args.batch_size}{tune}")
+          f"backend={args.backend} batch={args.batch_size}{tune}{extra}")
     for _ in range(args.requests):
         A = rng.standard_normal((args.rows, args.inner))
         B = rng.standard_normal((args.inner, args.rows))
@@ -326,6 +420,14 @@ def main(argv=None):
         print(f"[serve] decode-weight cache: {st['hits']} hits / "
               f"{st['misses']} misses (hit rate {st['hit_rate']:.0%}, "
               f"size {st['size']})")
+        for cls, cst in sorted(cache.class_stats().items(),
+                               key=lambda kv: kv[0].label()):
+            budget = (f"budget {cst['budget']}" if cst["budget"] is not None
+                      else "shared")
+            size = f", size {cst['size']}" if "size" in cst else ""
+            print(f"[serve]   class {cls.label()}: {cst['hits']} hits / "
+                  f"{cst['misses']} misses (hit rate {cst['hit_rate']:.0%}, "
+                  f"{budget}{size})")
     if policy is not None:
         for ev in policy.history:
             mark = "switch ->" if ev.switched else "keep"
@@ -350,6 +452,23 @@ def main(argv=None):
             save_state(policy, args.profile_state)
             print(f"[serve] saved profile state to {args.profile_state} "
                   f"({len(policy.classes())} class(es))")
+    if args.backend == "cluster":
+        pool = backend.pool
+        ps = pool.stats
+        print(f"[serve] cluster pool: {ps['spawned']} spawned, "
+              f"{ps['acquired']} acquired, {ps['released']} released, "
+              f"{ps['replaced']} replaced ({ps['crashed']} crashed, "
+              f"{ps['retired']} retired); {pool.size} active + "
+              f"{pool.spares} spare at exit")
+        if sched.losses:
+            lost = ", ".join(f"batch {b} shard {s} ({why})"
+                             for b, s, why in sched.losses)
+            print(f"[serve] lost shards: {lost}")
+        if args.record is not None:
+            backend.recording.save(args.record)
+            print(f"[serve] recorded {len(backend.recording)} batch "
+                  f"trace(s) to {args.record}")
+        backend.close()
 
 
 if __name__ == "__main__":

@@ -20,16 +20,18 @@ reports in — served incrementally:
 over this package; ``benchmarks/serve_throughput.py`` measures it against
 the per-deadline-recompute baseline.
 """
-from .backends import (DeviceBackend, ExecutionBackend, SimulatedBackend,
-                       make_backend)
+from .backends import (BACKEND_NAMES, DeviceBackend, ExecutionBackend,
+                       SimulatedBackend, make_backend)
 from .cache import DecodeWeightCache
 from .incremental import IncrementalDecoder, RecomputeDecoder, make_decoder
-from .master import (Answer, MasterScheduler, MatmulRequest, RequestResult,
-                     ServeConfig, merged_event_stream, serve_request)
+from .master import (Answer, AsyncMasterScheduler, MasterScheduler,
+                     MatmulRequest, RequestResult, ServeConfig,
+                     merged_event_stream, serve_request)
 
 __all__ = [
     "ExecutionBackend", "SimulatedBackend", "DeviceBackend", "make_backend",
-    "DecodeWeightCache", "IncrementalDecoder", "RecomputeDecoder",
-    "make_decoder", "MasterScheduler", "MatmulRequest", "ServeConfig",
-    "Answer", "RequestResult", "serve_request", "merged_event_stream",
+    "BACKEND_NAMES", "DecodeWeightCache", "IncrementalDecoder",
+    "RecomputeDecoder", "make_decoder", "MasterScheduler",
+    "AsyncMasterScheduler", "MatmulRequest", "ServeConfig", "Answer",
+    "RequestResult", "serve_request", "merged_event_stream",
 ]

@@ -14,8 +14,12 @@ completion times for the event loop:
   current (real) decode-weight vector from the incremental decoder becomes
   the weighted-psum reduction of ``runtime/coded.py``.
 
-Latencies stay a *model* on both backends — real clusters would report
-completions; here the seam is where those reports would plug in.
+Latencies stay a *model* on these two backends.  The seam where a real
+cluster's completion reports plug in is now closed by
+:class:`repro.cluster.backend.ClusterBackend` (``make_backend("cluster")``):
+worker-pool processes compute the shards and the serving loop walks
+*measured* arrival events; ``make_backend("replay")`` re-serves a recorded
+cluster trace through the simulated product path, bit-identically.
 """
 from __future__ import annotations
 
@@ -27,7 +31,7 @@ from ..core.straggler import (sample_times, shifted_exp_times,
                               validate_latency_kw)
 
 __all__ = ["ExecutionBackend", "SimulatedBackend", "DeviceBackend",
-           "make_backend"]
+           "make_backend", "BACKEND_NAMES"]
 
 
 class ExecutionBackend:
@@ -179,10 +183,36 @@ class DeviceBackend(ExecutionBackend):
             use_pallas=use_pallas)
 
 
+def _make_cluster(**kw):
+    from ..cluster.backend import ClusterBackend      # lazy: multiprocessing
+    return ClusterBackend(**kw)
+
+
+def _make_replay(**kw):
+    from ..cluster.backend import ReplayBackend
+    return ReplayBackend(**kw)
+
+
+# name -> constructor; the registry is the single source of the valid-name
+# list, so the rejection message below can never go stale
+_BACKENDS = {
+    "sim": SimulatedBackend,
+    "device": DeviceBackend,
+    "cluster": _make_cluster,
+    "replay": _make_replay,
+}
+
+BACKEND_NAMES = tuple(sorted(_BACKENDS))
+
+
 def make_backend(name: str, **kw) -> ExecutionBackend:
-    """Backend factory for the serving CLIs (``sim`` | ``device``)."""
-    if name == "sim":
-        return SimulatedBackend(**kw)
-    if name == "device":
-        return DeviceBackend(**kw)
-    raise ValueError(f"unknown backend {name!r}; known: sim, device")
+    """Backend factory for the serving CLIs.
+
+    ``sim`` | ``device`` | ``cluster`` | ``replay`` — an unknown name is
+    rejected with the valid list (same convention as ``run.py --only``).
+    """
+    build = _BACKENDS.get(name)
+    if build is None:
+        raise ValueError(f"unknown backend {name!r}; valid backends: "
+                         f"{', '.join(BACKEND_NAMES)}")
+    return build(**kw)

@@ -13,6 +13,15 @@ Timebase: completion times and deadlines live on the simulated latency
 clock (the shifted-exponential model, per batch); wall-clock throughput of
 the serving loop itself (the thing the incremental decoder accelerates) is
 reported separately by ``benchmarks/serve_throughput.py``.
+
+:class:`AsyncMasterScheduler` is the cluster path: the same queue/batch/
+policy surface, but ``_serve_batch`` consumes a *live* completion stream
+from a dispatching backend (``repro.cluster.ClusterBackend``) instead of a
+latency draw — deadlines become wall-clock seconds from dispatch, decoders
+update the moment each shard's product arrives, and answers emit mid-batch.
+The event ordering honors the ``merged_event_stream`` contract (time order;
+ties resolve completion-before-tick), which is what makes a recorded cluster
+run replay bit-identically through the simulated path.
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ from .cache import DecodeWeightCache
 from .incremental import make_decoder
 
 __all__ = ["ServeConfig", "MatmulRequest", "Answer", "RequestResult",
-           "MasterScheduler", "serve_request", "merged_event_stream"]
+           "MasterScheduler", "AsyncMasterScheduler", "serve_request",
+           "merged_event_stream"]
 
 
 def merged_event_stream(t_sorted, deadlines) -> list[tuple[float, int, int]]:
@@ -246,27 +256,36 @@ class MasterScheduler:
                     self.set_code(new_code, cls=cls)
         return results
 
-    def _serve_batch(self, batch: list[MatmulRequest],
-                     cls=None) -> list[RequestResult]:
-        code, cfg = self._code_for(cls), self.config
-        # the elastic fleet caps the *default* code wherever it serves
-        # (including class batches that have not switched yet); a per-class
-        # override is already sized by its own spec's N
-        Nf = code.N
-        if code is self.code and self.fleet is not None:
-            Nf = min(self.fleet, code.N)
-        products = self.backend.batch_products(
-            code, [r.A for r in batch], [r.B for r in batch],
-            n_shards=Nf if Nf != code.N else None)
-        times = self.backend.sample_latencies(self.rng, Nf)
-        if self.policy is not None:
-            if getattr(self.policy, "per_class", False):
-                self.policy.observe(times, n_requests=len(batch), cls=cls)
-            else:
-                self.policy.observe(times, n_requests=len(batch))
-        order = np.argsort(times, kind="stable")
-        t_sorted = times[order]
+    def _fleet_for(self, code: CDCCode) -> int:
+        """Shards actually dispatched for a batch served under ``code``.
 
+        The elastic fleet caps the *default* code wherever it serves
+        (including class batches that have not switched yet); a per-class
+        override is already sized by its own spec's N.
+        """
+        if code is self.code and self.fleet is not None:
+            return min(self.fleet, code.N)
+        return code.N
+
+    def _observe(self, times, n_requests: int, cls) -> None:
+        """Feed one batch's per-worker completion times to the policy."""
+        if self.policy is None:
+            return
+        if getattr(self.policy, "per_class", False):
+            self.policy.observe(times, n_requests=n_requests, cls=cls)
+        else:
+            self.policy.observe(times, n_requests=n_requests)
+
+    def _cache_for(self, batch: list[MatmulRequest]):
+        """The decoders' cache handle — class-scoped when budgets are on."""
+        if self.cache is None or not getattr(self.cache, "wants_classes",
+                                             False):
+            return self.cache
+        return self.cache.for_class(self._class_of(batch[0]))
+
+    def _prepare_batch(self, batch: list[MatmulRequest], code: CDCCode,
+                       cfg: ServeConfig):
+        """Per-request reference data, decoders, and result shells."""
         # oracle-grade β needs each request's true block products; the
         # closed-form modes don't, so skip the K block matmuls for them
         needs_oracle = cfg.beta_mode == "oracle"
@@ -282,15 +301,46 @@ class MasterScheduler:
                                            code.K)
                 req_oracle = code.oracle_context(Ab, Bb)
             refs.append((C, norm, req_oracle))
-
+        cache = self._cache_for(batch)
         decoders = [make_decoder(cfg.decoder, code, beta_mode=cfg.beta_mode,
-                                 oracle=refs[i][2], cache=self.cache)
+                                 oracle=refs[i][2], cache=cache)
                     for i in range(len(batch))]
         results = [RequestResult(r.req_id) for r in batch]
+        return refs, decoders, results
+
+    @staticmethod
+    def _reach_times(t_sorted: np.ndarray, code: CDCCode, Nf: int):
+        """``(ttfa, t_exact)`` threshold-crossing times (``None``: never)."""
         first_t = float(t_sorted[code.first_threshold - 1]) \
-            if code.first_threshold <= Nf else None
+            if code.first_threshold <= min(Nf, len(t_sorted)) else None
         exact_t = float(t_sorted[code.recovery_threshold - 1]) \
-            if code.recovery_threshold <= Nf else None
+            if code.recovery_threshold <= min(Nf, len(t_sorted)) else None
+        return first_t, exact_t
+
+    def _serve_batch(self, batch: list[MatmulRequest],
+                     cls=None) -> list[RequestResult]:
+        code, cfg = self._code_for(cls), self.config
+        Nf = self._fleet_for(code)
+        products = self.backend.batch_products(
+            code, [r.A for r in batch], [r.B for r in batch],
+            n_shards=Nf if Nf != code.N else None)
+        times = self.backend.sample_latencies(self.rng, Nf)
+        # a non-finite latency means the shard never completes (a replayed
+        # lost shard, a measured hang): it must not enter the event stream,
+        # the profile fit, or the threshold-crossing times — exactly how the
+        # live async path treats a loss, so lossy replays stay bit-identical
+        finite = np.isfinite(times)
+        if finite.any():
+            self._observe(times if finite.all() else times[finite],
+                          len(batch), cls)
+        order = np.argsort(times, kind="stable")
+        t_sorted = times[order]
+        if not finite.all():
+            keep = np.isfinite(t_sorted)
+            order, t_sorted = order[keep], t_sorted[keep]
+
+        refs, decoders, results = self._prepare_batch(batch, code, cfg)
+        first_t, exact_t = self._reach_times(t_sorted, code, Nf)
         for res in results:
             res.ttfa = first_t
             res.t_exact = exact_t
@@ -321,6 +371,116 @@ class MasterScheduler:
                 err = float(np.linalg.norm(est - C) ** 2 / norm)
             res.answers.append(Answer(t=t, m=m, rel_err=err,
                                       exact=m >= R, kind=kind))
+
+
+class AsyncMasterScheduler(MasterScheduler):
+    """Event-driven serving over a live dispatching backend (the cluster).
+
+    The backend must expose ``dispatch_batch(code, As, Bs, n_shards=...)``
+    returning a handle with ``next_event(timeout)`` / ``outstanding`` /
+    ``elapsed()`` / ``set_abandon`` / ``finalize()``
+    (:class:`repro.cluster.backend.ClusterDispatch`); a backend without the
+    live surface falls back to the simulated two-call protocol, so one
+    scheduler class serves both.
+
+    Deadlines are wall-clock seconds from dispatch.  The loop preserves the
+    ``merged_event_stream`` ordering contract: events are timestamped in
+    strictly increasing arrival order, a deadline tick fires after any
+    completion carrying an earlier-or-equal timestamp, and once every shard
+    is resolved the remaining ticks are fully determined and flush without
+    waiting out the wall clock.  Shards whose worker crashed (or that out-
+    live the last deadline by more than the backend's ``grace``) resolve as
+    *lost*: the decode path already tolerates their absence, and the loss is
+    logged in :attr:`losses`.
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.losses: list[tuple[int, int, str]] = []   # (batch#, shard, why)
+        self._batches_served = 0
+
+    def _serve_batch(self, batch: list[MatmulRequest],
+                     cls=None) -> list[RequestResult]:
+        if not hasattr(self.backend, "dispatch_batch"):
+            return super()._serve_batch(batch, cls)
+        code, cfg = self._code_for(cls), self.config
+        Nf = self._fleet_for(code)
+        # reference products / decoders are built *before* the dispatch
+        # starts the wall clock: the C = A@B error baselines are master-side
+        # bookkeeping and must not inflate the measured completion times
+        refs, decoders, results = self._prepare_batch(batch, code, cfg)
+        dispatch = self.backend.dispatch_batch(
+            code, [r.A for r in batch], [r.B for r in batch],
+            n_shards=Nf if Nf != code.N else None)
+        batch_no = self._batches_served
+        self._batches_served += 1
+        deadlines = sorted(float(d) for d in cfg.deadlines)
+        grace = float(getattr(self.backend, "grace", 2.0))
+        dispatch.set_abandon((deadlines[-1] if deadlines else 0.0) + grace)
+        R = code.recovery_threshold
+        shard_times: dict[int, float] = {}
+        m, di = 0, 0
+        try:
+            while di < len(deadlines) or dispatch.outstanding:
+                if not dispatch.outstanding:
+                    # every shard resolved: the remaining ticks carry the
+                    # final m whatever the wall clock says — flush them
+                    for dl in deadlines[di:]:
+                        self._emit(batch, decoders, refs, results, dl, m, R,
+                                   "deadline")
+                    di = len(deadlines)
+                    break
+                timeout = None
+                if di < len(deadlines):
+                    timeout = deadlines[di] - dispatch.elapsed()
+                    if timeout <= 0:
+                        self._emit(batch, decoders, refs, results,
+                                   deadlines[di], m, R, "deadline")
+                        di += 1
+                        continue
+                ev = dispatch.next_event(timeout=timeout)
+                if ev is None:
+                    continue               # deadline reached or spurious wake
+                # stream-contract tie rule: a tick fires after any
+                # completion sharing its timestamp, so strictly-earlier
+                # ticks flush before this event is ingested
+                while di < len(deadlines) and deadlines[di] < ev.t:
+                    self._emit(batch, decoders, refs, results, deadlines[di],
+                               m, R, "deadline")
+                    di += 1
+                if ev.kind == "done":
+                    m += 1
+                    for i, dec in enumerate(decoders):
+                        dec.push(ev.shard, ev.products[i])
+                    shard_times[ev.shard] = ev.t
+                    if cfg.stream:
+                        self._emit(batch, decoders, refs, results, ev.t, m,
+                                   R, "event")
+                else:                      # lost shard (crash/timeout)
+                    self.losses.append((batch_no, ev.shard, ev.reason))
+        finally:
+            dispatch.finalize()
+        t_sorted = np.sort(np.fromiter(shard_times.values(), np.float64,
+                                       count=len(shard_times)))
+        first_t, exact_t = self._reach_times(t_sorted, code, Nf)
+        for res in results:
+            res.ttfa = first_t
+            res.t_exact = exact_t
+        # observed completions feed the straggler profile: a full row keeps
+        # per-shard identity (the empirical fitter's column marginals); a
+        # lossy batch degrades to the pooled sample instead of fabricating
+        # times for shards that never arrived
+        if len(shard_times) == Nf:
+            row = np.empty(Nf)
+            for shard, t in shard_times.items():
+                row[shard] = t
+        else:
+            row = np.asarray(sorted(shard_times.values()), dtype=np.float64)
+        if row.size:
+            self._observe(row, len(batch), cls)
+        for res, dec in zip(results, decoders):
+            res.decode_stats = dict(dec.stats)
+        return results
 
 
 def serve_request(code: CDCCode, A, B, rng, *, deadlines,

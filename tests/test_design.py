@@ -320,6 +320,67 @@ def test_set_fleet_bit_identical_to_restricted_code(family):
     check()
 
 
+@pytest.mark.parametrize("family", CODE_NAMES)
+def test_set_fleet_growth_bit_identical_to_restricted_code(family):
+    """Property (hypothesis), the PR-4 shrink mirror for scale-*out*: a
+    scheduler that serves at fleet N_lo and then *grows* to N_hi serves the
+    second phase bit-identically to a fresh scheduler running
+    ``restrict_code(code, N_hi)`` on the continued rng stream — growing the
+    dispatched fleet is exactly deploying the larger restricted code.
+    """
+    st = pytest.importorskip("hypothesis.strategies")
+    hypothesis = pytest.importorskip("hypothesis")
+
+    code = default_spec(family, K, N).build(np.random.default_rng(3))
+    lo = _min_restrict_N(code)
+
+    @hypothesis.given(N_a=st.integers(min_value=lo, max_value=N),
+                      N_b=st.integers(min_value=lo, max_value=N),
+                      seed=st.integers(min_value=0, max_value=2**32 - 1))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def check(N_a, N_b, seed):
+        N_lo, N_hi = min(N_a, N_b), max(N_a, N_b)
+        cfg = ServeConfig(deadlines=(1.2, 1.8, 2.5), batch_size=2, seed=0)
+        rng = np.random.default_rng(11)
+        phase1 = [(rng.standard_normal((6, 4 * K)),
+                   rng.standard_normal((4 * K, 6))) for _ in range(2)]
+        phase2 = [(rng.standard_normal((6, 4 * K)),
+                   rng.standard_normal((4 * K, 6))) for _ in range(2)]
+
+        grow = MasterScheduler(code, SimulatedBackend(), cfg)
+        grow.set_fleet(N_lo)
+        a1 = _serve_answers(grow, phase1, seed)
+        grow.set_fleet(N_hi)                  # scale-out
+        for A, B in phase2:
+            grow.submit(A, B)
+        a2 = [(r.ttfa, r.t_exact,
+               [(x.t, x.m, x.rel_err, x.exact, x.kind) for x in r.answers])
+              for r in grow.run()]
+
+        # direct comparator: one rng stream threaded through two fresh
+        # schedulers at the restricted sizes (phase 1 consumes N_lo draws)
+        shared = np.random.default_rng(seed)
+        d1 = MasterScheduler(restrict_code(code, N_lo), SimulatedBackend(),
+                             cfg)
+        d1.rng = shared
+        for A, B in phase1:
+            d1.submit(A, B)
+        b1 = [(r.ttfa, r.t_exact,
+               [(x.t, x.m, x.rel_err, x.exact, x.kind) for x in r.answers])
+              for r in d1.run()]
+        d2 = MasterScheduler(restrict_code(code, N_hi), SimulatedBackend(),
+                             cfg)
+        d2.rng = shared
+        for A, B in phase2:
+            d2.submit(A, B)
+        b2 = [(r.ttfa, r.t_exact,
+               [(x.t, x.m, x.rel_err, x.exact, x.kind) for x in r.answers])
+              for r in d2.run()]
+        assert a1 == b1 and a2 == b2
+
+    check()
+
+
 def test_best_for_target_prefers_cheapest_meeting_fleet():
     profile = GeneratorProfile("shifted_exp")
     space = CodeSpace(K, 24, N_options=(8, 12, 24))
