@@ -7,30 +7,37 @@ shard to one process of a :class:`~repro.cluster.pool.WorkerPool` (operands
 via shared memory), and the completion *times* the serving loop walks are
 measured on the master as each product arrives, not drawn from a model.
 
-Two consumption modes:
+:meth:`ClusterBackend.dispatch_batch` returns a :class:`ClusterDispatch`
+whose :meth:`~ClusterDispatch.next_event` stream feeds the unified serving
+loop: decoders update as shards arrive, answers emit mid-batch.  The legacy
+two-call :meth:`batch_products` / ``sample_latencies`` protocol survives as
+a deprecated blocking shim over the same dispatch.
 
-* **live** — :meth:`ClusterBackend.dispatch_batch` returns a
-  :class:`ClusterDispatch` whose :meth:`~ClusterDispatch.next_event` stream
-  feeds ``serving.master.AsyncMasterScheduler``: decoders update as shards
-  arrive, answers emit mid-batch.
-* **sync** — the classic :meth:`batch_products` / ``sample_latencies``
-  backend protocol still works (dispatch, drain everything, return the
-  product stack + the observed times), so a plain ``MasterScheduler`` can
-  serve from the cluster too.
+**Speculative execution** (``speculate=True``): the dispatch can re-send a
+still-pending shard to a backup worker leased *outside* the active fleet
+(:meth:`ClusterDispatch.speculate` — the scheduler's hedging policy decides
+when), first completion wins and losing copies are cancelled; a crashed
+primary's shard is re-queued to its replacement instead of abandoned; and
+``replicate=r`` pins ``r-1`` up-front copies of every shard (the
+replication baseline the paper compares against).
 
 :class:`ReplayBackend` replays a :class:`~repro.cluster.events.TraceRecording`
 through the simulated product path — the record/replay fixture that pins the
-cluster decode outputs bit-identical to the simulated ones.
+cluster decode outputs bit-identical to the simulated ones.  Replay needs
+only the final per-shard outcome, so speculative traces replay through the
+same fixture unchanged.
 """
 from __future__ import annotations
 
 import queue as queue_mod
 import time
+import warnings
 from multiprocessing import shared_memory
 
 import numpy as np
 
-from ..serving.backends import ExecutionBackend, SimulatedBackend
+from ..serving.backends import (ExecutionBackend, SimulatedBackend,
+                                _TWO_CALL_DEPRECATION)
 from .events import BatchRecord, ShardEvent, TraceRecording
 from .pool import WorkerPool
 
@@ -62,26 +69,49 @@ class ClusterDispatch:
         self.pool = backend.pool
         self.n_shards = int(E_A.shape[1])
         self.batch_id = backend._next_batch_id()
+        self.max_requeue = backend.max_requeue
+        if backend.speculate_enabled:
+            # a worker wedged on a previous batch (hung primary whose shard
+            # a backup won) must not be handed a fresh shard
+            for wid in self.pool.stale_workers(self.batch_id):
+                self.pool.retire(wid, "stale")
         self.workers = self.pool.lease(self.n_shards)
-        self._shm_a, a_meta = _to_shm(E_A)
-        self._shm_b, b_meta = _to_shm(E_B)
+        self._shm_a, self._a_meta = _to_shm(E_A)
+        self._shm_b, self._b_meta = _to_shm(E_B)
         self._out_shape = (E_A.shape[0], E_A.shape[2], E_B.shape[3])
         self._out_dtype = np.result_type(E_A.dtype, E_B.dtype)
-        self.pending: dict[int, int] = {}         # shard -> worker id
+        self.pending: dict[int, int] = {}         # shard -> primary worker id
+        self.copies: dict[int, set[int]] = {}     # shard -> every live copy
+        self.attempts: dict[int, int] = {}        # shard -> dispatch count
         self.times: dict[int, float] = {}
         self.lost: dict[int, str] = {}
         self.products: dict[int, np.ndarray] = {}
-        self._losses: list[ShardEvent] = []
+        self.redispatches: list[tuple[int, str]] = []
+        self.n_speculated = 0
+        self._backup_wids: list[int] = []
+        self._queued: list[ShardEvent] = []       # lost/redispatch backlog
         self._last_t = 0.0
         self.abandon_at: float | None = None
         self._finalized = False
+        if backend.speculate_enabled or backend.replicate > 1:
+            # pay process startup before the dispatch clock starts, so a
+            # mid-batch lease_backup finds a warm ready spare
+            self.pool.prewarm(max(self.pool.target_spares,
+                                  (backend.replicate - 1) * self.n_shards))
         self._t0 = time.monotonic()
         for shard in range(self.n_shards):
             wid = self.workers[shard]
             self.pending[shard] = wid
+            self.copies[shard] = {wid}
+            self.attempts[shard] = 1
             if not self.pool.send(
-                    wid, ("task", self.batch_id, shard, a_meta, b_meta)):
+                    wid, ("task", self.batch_id, shard,
+                          self._a_meta, self._b_meta)):
                 self._mark_lost(shard, "dispatch")
+        if backend.replicate > 1:
+            for shard in range(self.n_shards):
+                for _ in range(backend.replicate - 1):
+                    self.speculate(shard, reason="replicate")
 
     # ------------------------------------------------------------------ time
     def elapsed(self) -> float:
@@ -98,26 +128,100 @@ class ClusterDispatch:
     # ------------------------------------------------------------ event pump
     @property
     def outstanding(self) -> int:
-        return len(self.pending)
+        # queued lost/redispatch events still owe the consumer a delivery
+        return len(self.pending) + len(self._queued)
 
     def set_abandon(self, t: float | None) -> None:
         """Abandon still-pending shards once ``elapsed() >= t`` (hang bound)."""
         self.abandon_at = None if t is None else float(t)
 
+    # ----------------------------------------------------------- speculation
+    def copies_of(self, shard: int) -> int:
+        """How many live copies of ``shard`` are currently in flight."""
+        return len(self.copies.get(shard, ()))
+
+    def speculate(self, shard: int, reason: str = "hedge") -> bool:
+        """Re-dispatch a still-pending shard to a freshly leased backup.
+
+        The backup runs *outside* the active fleet (shard → slot identity
+        never rotates) and races the primary: first completion wins, the
+        loser is cancelled.  Emits a ``redispatch`` event on the stream.
+        Returns ``False`` when the shard already resolved or no backup
+        could be leased — the caller simply doesn't hedge.
+        """
+        if shard not in self.pending:
+            return False
+        wid = self.pool.lease_backup()
+        if wid is None:
+            return False
+        if not self.pool.send(wid, ("task", self.batch_id, shard,
+                                    self._a_meta, self._b_meta)):
+            self.pool.release_backup(wid)
+            return False
+        self._backup_wids.append(wid)
+        self.copies.setdefault(shard, set()).add(wid)
+        self.attempts[shard] = self.attempts.get(shard, 1) + 1
+        self.n_speculated += 1
+        self.redispatches.append((shard, reason))
+        self._queued.append(ShardEvent(kind="redispatch", shard=shard,
+                                       t=self._stamp(), worker=wid,
+                                       reason=reason))
+        return True
+
     def _mark_lost(self, shard: int, reason: str) -> None:
         wid = self.pending.pop(shard)
         self.pool.mark_done(wid, self.batch_id, shard)
+        for other in self.copies.pop(shard, set()) - {wid}:
+            self.pool.cancel(other, self.batch_id, shard)
         t = self._stamp()
         self.lost[shard] = reason
-        self._losses.append(ShardEvent(kind="lost", shard=shard, t=t,
+        self._queued.append(ShardEvent(kind="lost", shard=shard, t=t,
                                        worker=wid, reason=reason))
 
+    def _requeue(self, shard: int) -> bool:
+        """Crashed primary: re-send the shard to its slot's replacement."""
+        new_wid = self.pool.active[shard]
+        if not self.pool.send(new_wid, ("task", self.batch_id, shard,
+                                        self._a_meta, self._b_meta)):
+            return False
+        self.pending[shard] = new_wid
+        self.copies.setdefault(shard, set()).add(new_wid)
+        self.attempts[shard] = self.attempts.get(shard, 1) + 1
+        self.pool.requeued(1)
+        self.redispatches.append((shard, "crash"))
+        self._queued.append(ShardEvent(kind="redispatch", shard=shard,
+                                       t=self._stamp(), worker=new_wid,
+                                       reason="crash"))
+        return True
+
     def _sweep(self) -> None:
-        """Reap crashed workers; abandon everything past the hang bound."""
+        """Reap crashed workers; abandon everything past the hang bound.
+
+        In speculate mode a crashed primary's shard is *re-queued* — to a
+        surviving copy if one is racing, else to the replacement worker in
+        the same lease slot (bounded by ``max_requeue`` attempts) — instead
+        of being written off for the batch.
+        """
         for wid, lost_shards in self.pool.reap(replace=True):
             for batch_id, shard in lost_shards:
-                if batch_id == self.batch_id and shard in self.pending:
-                    self._mark_lost(shard, "crash")
+                if batch_id != self.batch_id or shard not in self.pending:
+                    continue
+                if self.pending[shard] != wid:
+                    # a backup copy died; the primary is still racing
+                    self.copies.get(shard, set()).discard(wid)
+                    continue
+                self.copies.get(shard, set()).discard(wid)
+                survivors = self.copies.get(shard, set())
+                if survivors:
+                    # promote a live copy to primary; reap overcounted
+                    self.pending[shard] = min(survivors)
+                    self.pool.requeued(1)
+                    continue
+                if (self.backend.speculate_enabled
+                        and self.attempts.get(shard, 1) < self.max_requeue
+                        and self._requeue(shard)):
+                    continue
+                self._mark_lost(shard, "crash")
         if self.abandon_at is not None and self.elapsed() >= self.abandon_at:
             for shard in sorted(self.pending):
                 wid = self.pending[shard]
@@ -127,8 +231,11 @@ class ClusterDispatch:
                 self._mark_lost(shard, "timeout")
 
     def next_event(self, timeout: float | None = None) -> ShardEvent | None:
-        """The next live event (``done`` or ``lost``), or ``None`` on timeout.
+        """The next live event, or ``None`` on timeout.
 
+        Kinds: ``done`` (first completion of a shard — late duplicates from
+        cancelled copies are swallowed and counted by the pool), ``lost``,
+        and ``redispatch`` (a speculative/re-queued copy was launched).
         Blocks at most ``timeout`` seconds (``None``: until the next event
         or the abandon bound).  Crashed workers surface as ``lost`` events
         from the periodic reap sweep, so a dead process can never wedge the
@@ -136,13 +243,13 @@ class ClusterDispatch:
         """
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
-            if self._losses:
-                return self._losses.pop(0)
+            if self._queued:
+                return self._queued.pop(0)
             if not self.pending:
                 return None
             self._sweep()
-            if self._losses:
-                return self._losses.pop(0)
+            if self._queued:
+                return self._queued.pop(0)
             left = _POLL if deadline is None \
                 else min(_POLL, deadline - time.monotonic())
             if left <= 0:
@@ -154,28 +261,33 @@ class ClusterDispatch:
             if msg[0] == "pong":
                 continue
             _, wid, batch_id, shard, P = msg
-            self.pool.mark_done(wid, batch_id, shard)
-            if batch_id != self.batch_id or shard not in self.pending:
-                continue                  # stale result of an abandoned batch
-            del self.pending[shard]
+            duplicate = self.pool.mark_done(wid, batch_id, shard)
+            if duplicate or batch_id != self.batch_id \
+                    or shard not in self.pending:
+                continue              # stale/abandoned/first-wins loser
+            primary = self.pending.pop(shard)
+            for other in self.copies.pop(shard, {primary}) - {wid}:
+                self.pool.cancel(other, batch_id, shard)
             t = self._stamp()
             self.times[shard] = t
             self.products[shard] = P
             return ShardEvent(kind="done", shard=shard, t=t, worker=wid,
-                              products=P)
+                              products=P, speculative=wid != primary)
 
     def drain(self, timeout: float) -> None:
         """Pump events until nothing is pending (bounded by ``timeout``)."""
         if self.abandon_at is None:
             self.set_abandon(self.elapsed() + timeout)
-        while self.pending or self._losses:
+        while self.pending or self._queued:
             if self.next_event(timeout=_POLL) is None and not self.pending:
                 break
 
     # -------------------------------------------------------------- teardown
     def record(self) -> BatchRecord:
         return BatchRecord(n_shards=self.n_shards, times=dict(self.times),
-                           lost=dict(self.lost))
+                           lost=dict(self.lost),
+                           redispatches=[[s, r]
+                                         for s, r in self.redispatches])
 
     def latency_row(self) -> np.ndarray:
         """Measured per-shard times (``inf`` where the shard never arrived)."""
@@ -198,6 +310,8 @@ class ClusterDispatch:
         if self._finalized:
             return self.record()
         self._finalized = True
+        for wid in self._backup_wids:
+            self.pool.release_backup(wid)
         for shm in (self._shm_a, self._shm_b):
             shm.close()
             shm.unlink()
@@ -217,6 +331,13 @@ class ClusterBackend(ExecutionBackend):
     abandoning them (the hang bound); ``sync_timeout`` bounds the blocking
     :meth:`batch_products` path.  ``record=True`` keeps a
     :class:`~repro.cluster.events.TraceRecording` of every batch for replay.
+
+    ``speculate=True`` arms the speculative surface: crashed primaries'
+    shards re-queue to their replacements (up to ``max_requeue`` attempts),
+    wedged workers are retired between batches, and the scheduler may call
+    :meth:`ClusterDispatch.speculate` mid-batch.  ``replicate=r`` instead
+    pins ``r-1`` up-front copies of every shard — the classic replication
+    baseline, no policy in the loop.
     """
 
     name = "cluster"
@@ -224,15 +345,22 @@ class ClusterBackend(ExecutionBackend):
     def __init__(self, *, workers: int = 4, spares: int = 0,
                  chaos=None, seed: int = 0, record: bool = False,
                  grace: float = 2.0, sync_timeout: float = 60.0,
+                 speculate: bool = False, replicate: int = 1,
+                 max_requeue: int = 3,
                  start_method: str = "spawn", pool: WorkerPool | None = None):
         if grace <= 0 or sync_timeout <= 0:
             raise ValueError("grace and sync_timeout must be > 0")
+        if replicate < 1:
+            raise ValueError(f"replicate must be >= 1; got {replicate}")
         self.pool = pool if pool is not None else WorkerPool(
             workers, spares=spares, chaos=chaos, seed=seed,
             start_method=start_method)
         self._owns_pool = pool is None
         self.grace = float(grace)
         self.sync_timeout = float(sync_timeout)
+        self.speculate_enabled = bool(speculate)
+        self.replicate = int(replicate)
+        self.max_requeue = int(max_requeue)
         self.recording: TraceRecording | None = \
             TraceRecording() if record else None
         self._batch_counter = 0
@@ -243,26 +371,30 @@ class ClusterBackend(ExecutionBackend):
         return self._batch_counter
 
     # ------------------------------------------------------------- live path
-    def dispatch_batch(self, code, As, Bs,
-                       n_shards: int | None = None) -> ClusterDispatch:
+    def dispatch_batch(self, code, As, Bs, n_shards: int | None = None,
+                       rng=None) -> ClusterDispatch:
         """Encode the batch and fan its shards out to the pool — live handle.
 
         The pool is right-sized to the shard count: a code (or fleet cap)
         larger than the current fleet *acquires* workers — the scale-out
-        path — and a smaller one releases them into warm spares.
+        path — and a smaller one releases them into warm spares.  ``rng``
+        is accepted for the unified backend signature and unused: cluster
+        latencies are measured, never drawn.
         """
         E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
         return ClusterDispatch(self, E_A, E_B)
 
-    # ------------------------------------------------- classic backend seam
+    # --------------------------------------------- deprecated two-call seam
     def batch_products(self, code, As, Bs,
                        n_shards: int | None = None) -> np.ndarray:
-        """Blocking dispatch: drain every shard, then return the stack.
+        """Deprecated blocking shim: drain every shard, return the stack.
 
         The measured completion times are kept for the paired
-        :meth:`sample_latencies` call, preserving the two-call backend
-        protocol the simulated scheduler drives.
+        :meth:`sample_latencies` call, preserving the legacy two-call
+        backend protocol for external callers.
         """
+        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
+                      stacklevel=2)
         d = self.dispatch_batch(code, As, Bs, n_shards)
         d.drain(self.sync_timeout)
         self._last_times = d.latency_row()
@@ -272,11 +404,13 @@ class ClusterBackend(ExecutionBackend):
 
     def sample_latencies(self, rng: np.random.Generator,
                          N: int) -> np.ndarray:
-        """Observed times of the last dispatched batch (``rng`` unused).
+        """Deprecated: observed times of the last batch (``rng`` unused).
 
         Real completions are measured, not drawn — the seam the simulated
         backends documented.  Lost shards report ``inf``: they never arrive.
         """
+        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
+                      stacklevel=2)
         if self._last_times is None or len(self._last_times) != N:
             raise ValueError(
                 "no measured latencies for this fleet size; "
@@ -301,7 +435,7 @@ class ReplayBackend(SimulatedBackend):
 
     Products come from the *same* encode + contraction as the cluster
     workers (bit-identical on the same host — pinned), and
-    ``sample_latencies`` replays the measured per-shard times batch by
+    ``draw_latencies`` replays the measured per-shard times batch by
     batch.  Serving a replay therefore reproduces a cluster run exactly,
     which is both the equivalence fixture and a debugging tool (re-serve a
     production trace under a different decoder/cache configuration).
@@ -314,8 +448,8 @@ class ReplayBackend(SimulatedBackend):
         self.recording = recording
         self._cursor = 0
 
-    def sample_latencies(self, rng: np.random.Generator,
-                         N: int) -> np.ndarray:
+    def draw_latencies(self, rng: np.random.Generator,
+                       N: int) -> np.ndarray:
         if self._cursor >= len(self.recording.batches):
             raise ValueError(f"trace exhausted after "
                              f"{len(self.recording.batches)} batches")

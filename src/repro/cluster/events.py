@@ -30,28 +30,43 @@ class ShardEvent:
     """One element of a live completion stream.
 
     ``kind`` is ``"done"`` (``products`` holds the shard's ``(B, Nx, Ny)``
-    stack over the batch) or ``"lost"`` (``reason``: ``"crash"`` — the
+    stack over the batch), ``"lost"`` (``reason``: ``"crash"`` — the
     worker process died, ``"timeout"`` — the shard was abandoned past the
-    hang deadline, ``"dispatch"`` — the task could not be delivered).
-    ``t`` is seconds since the batch was dispatched, strictly increasing
-    within a batch so replayed event order is exactly arrival order.
+    hang deadline, ``"dispatch"`` — the task could not be delivered), or
+    ``"redispatch"`` — the shard was sent to an *additional* worker
+    mid-batch (``reason``: ``"hedge"`` — the speculation policy fired,
+    ``"crash"`` — a crashed primary's shard was re-queued, ``"replicate"``
+    — up-front pinned replication).  ``t`` is seconds since the batch was
+    dispatched, strictly increasing within a batch so replayed event order
+    is exactly arrival order.  ``speculative`` marks ``done`` events won by
+    a speculative copy rather than the original dispatchee.
     """
 
-    kind: str                     # "done" | "lost"
+    kind: str                     # "done" | "lost" | "redispatch"
     shard: int                    # encode-shard index (the code's worker id)
     t: float                      # seconds since dispatch
     worker: int                   # pool worker id that held the shard
     products: np.ndarray | None = None     # (B, Nx, Ny) for "done"
-    reason: str | None = None              # for "lost"
+    reason: str | None = None              # for "lost" / "redispatch"
+    speculative: bool = False              # "done": a speculative copy won
 
 
 @dataclass
 class BatchRecord:
-    """Measured completion process of one dispatched batch."""
+    """Measured completion process of one dispatched batch.
+
+    ``redispatches`` is speculative-execution metadata (``[shard, reason]``
+    pairs in trigger order) — bookkeeping only.  Replay needs just the
+    final per-shard ``times``/``lost`` outcome (whoever won, the shard
+    completed exactly once at the recorded instant), which is what keeps a
+    speculative trace replaying bit-identically through schema VERSION 1:
+    the field is additive, defaults empty, and old traces load unchanged.
+    """
 
     n_shards: int
     times: dict[int, float] = field(default_factory=dict)   # shard -> t
     lost: dict[int, str] = field(default_factory=dict)      # shard -> reason
+    redispatches: list = field(default_factory=list)        # [shard, reason]
 
     def latency_row(self) -> np.ndarray:
         """Per-shard completion times; lost shards never complete (``inf``).
@@ -67,16 +82,22 @@ class BatchRecord:
         return row
 
     def to_dict(self) -> dict:
-        return {"n_shards": int(self.n_shards),
-                "times": {str(k): float(v) for k, v in self.times.items()},
-                "lost": {str(k): str(v) for k, v in self.lost.items()}}
+        out = {"n_shards": int(self.n_shards),
+               "times": {str(k): float(v) for k, v in self.times.items()},
+               "lost": {str(k): str(v) for k, v in self.lost.items()}}
+        if self.redispatches:
+            out["redispatches"] = [[int(s), str(r)]
+                                   for s, r in self.redispatches]
+        return out
 
     @staticmethod
     def from_dict(d: dict) -> "BatchRecord":
         return BatchRecord(
             n_shards=int(d["n_shards"]),
             times={int(k): float(v) for k, v in d.get("times", {}).items()},
-            lost={int(k): str(v) for k, v in d.get("lost", {}).items()})
+            lost={int(k): str(v) for k, v in d.get("lost", {}).items()},
+            redispatches=[[int(s), str(r)]
+                          for s, r in d.get("redispatches", [])])
 
 
 @dataclass

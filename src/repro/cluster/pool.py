@@ -18,6 +18,13 @@ growing past it needed somewhere for the extra workers to come from.
   so the fleet heals to its leased size.
 * :meth:`heartbeat` — active ping over the task pipes (a stuck-but-alive
   worker answers ``is_alive()`` yet never a ping); safe between batches.
+* :meth:`lease_backup` / :meth:`release_backup` / :meth:`cancel` /
+  :meth:`prewarm` — the speculative-execution surface: backups are leased
+  *outside* the active fleet (shard → slot identity never rotates), a
+  cancelled copy's late result is reaped as a duplicate
+  (``duplicates_reaped``) instead of corrupting the next batch, and
+  ``shards_cancelled`` counts first-wins losers separately from
+  ``shards_lost`` (shards that genuinely never arrived).
 
 Workers are daemon processes: a wedged master can die without leaving
 orphans, and CI jobs cannot be held hostage by a hung worker.
@@ -89,11 +96,16 @@ class WorkerPool:
         self.results = self._ctx.Queue()
         self._active: dict[int, WorkerHandle] = {}
         self._spares: list[WorkerHandle] = []
+        self._backups: dict[int, WorkerHandle] = {}   # speculative leases
+        self._cancelled: set[tuple[int, int, int]] = set()  # (wid, batch,
+        #                                                      shard)
         self._next_id = 0
         self._closed = False
         self.stats = {"spawned": 0, "replaced": 0, "retired": 0,
                       "crashed": 0, "acquired": 0, "released": 0,
-                      "shards_lost": 0}
+                      "shards_lost": 0, "shards_cancelled": 0,
+                      "duplicates_reaped": 0, "backups_leased": 0,
+                      "shards_requeued": 0}
         if workers:
             self.acquire(workers)
 
@@ -110,6 +122,16 @@ class WorkerPool:
     @property
     def spares(self) -> int:
         return len(self._spares)
+
+    @property
+    def backups(self) -> list[int]:
+        """Worker ids of live speculative leases (outside the active fleet)."""
+        return list(self._backups)
+
+    def _handle(self, wid: int) -> WorkerHandle | None:
+        """Resolve a worker id across the active fleet and backup leases."""
+        h = self._active.get(int(wid))
+        return h if h is not None else self._backups.get(int(wid))
 
     def _spawn(self) -> WorkerHandle:
         wid = self._next_id
@@ -213,6 +235,10 @@ class WorkerPool:
         process with a fresh id) when ``replace`` — the pool heals to its
         leased size, and the caller learns which in-flight ``(batch, shard)``
         pairs died with the process.  Dead spares are silently scrapped.
+        Dead *backup* workers are scrapped without replacement (and without
+        counting ``shards_lost`` — their copies are duplicates whose primary
+        may still deliver); the dispatch decides whether the shard needs a
+        fresh copy.
         """
         self._check_open()
         dead = []
@@ -223,12 +249,21 @@ class WorkerPool:
             self.stats["crashed"] += 1
             self.stats["shards_lost"] += len(h.busy)
             self._scrap(h)
+            self._forget_cancelled(wid)
             if replace:
                 nh = self._spawn()
                 self._replace_slot(wid, nh)
                 self.stats["replaced"] += 1
             else:
                 del self._active[wid]
+        for wid, h in list(self._backups.items()):
+            if h.alive():
+                continue
+            dead.append((wid, set(h.busy)))
+            self.stats["crashed"] += 1
+            self._scrap(h)
+            self._forget_cancelled(wid)
+            del self._backups[wid]
         self._spares = [h for h in self._spares
                         if h.alive() or self._scrap(h)]
         return dead
@@ -245,16 +280,52 @@ class WorkerPool:
                         for wid, h in self._active.items()}
 
     def retire(self, wid: int, reason: str = "retired") -> None:
-        """Kill and replace one active worker (hung past its deadline)."""
-        h = self._active.get(int(wid))
+        """Kill and replace one active worker (hung past its deadline).
+
+        A backup lease is killed without replacement — backups have no slot
+        in the lease order to heal, and their in-flight copies are
+        duplicates, not losses.
+        """
+        wid = int(wid)
+        bh = self._backups.pop(wid, None)
+        if bh is not None:
+            self.stats["retired"] += 1
+            bh.proc.kill()
+            self._scrap(bh, join=True)
+            self._forget_cancelled(wid)
+            return
+        h = self._active.get(wid)
         if h is None:
             return
         self.stats["retired"] += 1
         self.stats["shards_lost"] += len(h.busy)
         h.proc.kill()
         self._scrap(h, join=True)
-        self._replace_slot(int(wid), self._spawn())
+        self._forget_cancelled(wid)
+        self._replace_slot(wid, self._spawn())
         self.stats["replaced"] += 1
+
+    def _forget_cancelled(self, wid: int) -> None:
+        """Drop cancellation bookkeeping for a worker that no longer exists."""
+        self._cancelled = {c for c in self._cancelled if c[0] != wid}
+
+    def stale_workers(self, batch_id: int) -> list[int]:
+        """Active workers still holding work from batches before ``batch_id``.
+
+        A hung primary whose shard was won by a speculative copy keeps no
+        ``busy`` entry (first-wins cancel cleared it) but does keep a
+        ``_cancelled`` marker; a plain hung worker keeps its ``busy`` entry.
+        Either way the process is wedged and must be retired before it can
+        poison the next dispatch.
+        """
+        out = []
+        for wid, h in self._active.items():
+            if any(b < batch_id for b, _ in h.busy):
+                out.append(wid)
+            elif any(c[0] == wid and c[1] < batch_id
+                     for c in self._cancelled):
+                out.append(wid)
+        return out
 
     def heartbeat(self, timeout: float = 2.0) -> dict[int, float]:
         """Ping every idle active worker; returns ``{wid: rtt_seconds}``.
@@ -290,7 +361,7 @@ class WorkerPool:
     # ------------------------------------------------------------- transport
     def send(self, wid: int, msg) -> bool:
         """Deliver one task message; ``False`` when the pipe is already dead."""
-        h = self._active.get(int(wid))
+        h = self._handle(wid)
         if h is None:
             return False
         try:
@@ -301,10 +372,108 @@ class WorkerPool:
             h.busy.add((msg[1], msg[2]))
         return True
 
-    def mark_done(self, wid: int, batch_id: int, shard: int) -> None:
-        h = self._active.get(int(wid))
+    def mark_done(self, wid: int, batch_id: int, shard: int) -> bool:
+        """Record a completion; ``True`` when it was a reaped duplicate.
+
+        A result from a copy cancelled by first-wins is still delivered on
+        the shared queue eventually — it must be swallowed (and counted)
+        instead of being mistaken for a fresh completion.
+        """
+        key = (int(wid), int(batch_id), int(shard))
+        dup = key in self._cancelled
+        if dup:
+            self._cancelled.discard(key)
+            self.stats["duplicates_reaped"] += 1
+        h = self._handle(wid)
         if h is not None:
             h.busy.discard((batch_id, shard))
+        return dup
+
+    # ----------------------------------------------------------- speculation
+    def cancel(self, wid: int, batch_id: int, shard: int) -> bool:
+        """First-wins: mark a losing copy cancelled; its late result is reaped.
+
+        Returns ``True`` when the worker still held the shard.  The worker
+        itself is not interrupted (tasks are not preemptible); the
+        ``_cancelled`` marker makes its eventual result land as a
+        ``duplicates_reaped`` instead of a completion.
+        """
+        h = self._handle(wid)
+        if h is None or (batch_id, shard) not in h.busy:
+            return False
+        h.busy.discard((batch_id, shard))
+        self._cancelled.add((int(wid), int(batch_id), int(shard)))
+        self.stats["shards_cancelled"] += 1
+        return True
+
+    def lease_backup(self) -> int | None:
+        """Lease one worker *outside* the active fleet for a speculative copy.
+
+        Warm spares are reused first; otherwise a fresh process is spawned
+        and its startup handshake awaited (bounded by ``ready_timeout``) so
+        the copy starts computing immediately.  The backup never enters the
+        lease order — shard → slot identity in ``active`` stays stable.
+        """
+        self._check_open()
+        while self._spares:
+            h = self._spares.pop()
+            if h.alive():
+                break
+            self._scrap(h)
+        else:
+            h = self._spawn()
+        deadline = time.monotonic() + self.ready_timeout
+        while not h.poll_ready(0.0):
+            left = deadline - time.monotonic()
+            if left <= 0 or not h.alive():
+                break
+            h.poll_ready(min(left, 0.05))
+        if not h.alive():
+            self._scrap(h)
+            return None
+        self._backups[h.wid] = h
+        self.stats["backups_leased"] += 1
+        return h.wid
+
+    def release_backup(self, wid: int) -> None:
+        """Return a speculative lease; keep it warm if the budget allows."""
+        h = self._backups.pop(int(wid), None)
+        if h is None:
+            return
+        self.stats["released"] += 1
+        if h.alive() and len(self._spares) < self.target_spares:
+            self._spares.append(h)
+        else:
+            self._shutdown_handle(h)
+
+    def prewarm(self, n: int) -> None:
+        """Spawn up to ``n`` warm spares and await their startup handshakes.
+
+        Called before a speculative dispatch so a mid-batch ``lease_backup``
+        never pays process startup inside the deadline window.
+        """
+        self._check_open()
+        fresh = []
+        while len(self._spares) + len(fresh) < int(n):
+            fresh.append(self._spawn())
+        deadline = time.monotonic() + self.ready_timeout
+        for h in fresh:
+            while not h.poll_ready(0.0):
+                left = deadline - time.monotonic()
+                if left <= 0 or not h.alive():
+                    break
+                h.poll_ready(min(left, 0.05))
+        self._spares.extend(h for h in fresh if h.alive() or self._scrap(h))
+
+    def requeued(self, n: int = 1) -> None:
+        """Reclassify ``n`` crash losses as re-queues (the shard lives on).
+
+        ``reap`` charges ``shards_lost`` for every in-flight shard of a dead
+        worker; when the dispatch re-sends the shard to the replacement
+        instead of abandoning it, the loss didn't happen.
+        """
+        self.stats["shards_lost"] -= int(n)
+        self.stats["shards_requeued"] += int(n)
 
     # -------------------------------------------------------------- shutdown
     def _scrap(self, h: WorkerHandle, join: bool = False) -> bool:
@@ -332,9 +501,11 @@ class WorkerPool:
         if self._closed:
             return
         self._closed = True
-        for h in [*self._active.values(), *self._spares]:
+        for h in [*self._active.values(), *self._backups.values(),
+                  *self._spares]:
             self._shutdown_handle(h)
         self._active.clear()
+        self._backups.clear()
         self._spares.clear()
         self.results.cancel_join_thread()
         self.results.close()

@@ -39,7 +39,8 @@ Serving integration: ``python -m repro.launch.serve --autotune``.
 from .drift import (DriftReport, KSDriftDetector, PageHinkleyDetector,
                     make_drift_detector)
 from .pareto import DesignPoint, ParetoSearch, pareto_frontier
-from .policy import AdaptivePolicy, RequestClass, RetuneEvent
+from .policy import (AdaptivePolicy, RequestClass, RetuneEvent,
+                     SpeculationPolicy, layer_value)
 from .profile import GeneratorProfile, StragglerProfile
 from .space import CodeSpace, CodeSpec, default_spec, group_compositions
 from .state import load_state, save_state
@@ -48,6 +49,7 @@ __all__ = [
     "CodeSpec", "CodeSpace", "default_spec", "group_compositions",
     "StragglerProfile", "GeneratorProfile", "DesignPoint", "ParetoSearch",
     "pareto_frontier", "AdaptivePolicy", "RetuneEvent", "RequestClass",
+    "SpeculationPolicy", "layer_value",
     "DriftReport", "KSDriftDetector", "PageHinkleyDetector",
     "make_drift_detector", "save_state", "load_state",
 ]

@@ -41,6 +41,13 @@ Elastic-fleet extensions on top of the PR-3 fixed-window policy:
 The policy owns its randomness (search seeds, G-SAC shuffles); it never
 draws from the scheduler's rng, so attaching a policy does not perturb the
 served latency stream.
+
+:class:`SpeculationPolicy` is the *within*-batch companion: the hedging
+trigger the unified serving loop consults between events to decide whether
+a still-pending shard should be re-dispatched to a backup worker
+(:func:`layer_value` weighs what the next completion is worth to the
+successive-approximation decode; ``StragglerProfile.p_finish_by`` says how
+likely the shard is to arrive in time on its own).
 """
 from __future__ import annotations
 
@@ -54,12 +61,86 @@ from .pareto import DesignPoint, ParetoSearch
 from .profile import StragglerProfile
 from .space import CodeSpace
 
-__all__ = ["AdaptivePolicy", "RetuneEvent", "RequestClass"]
+__all__ = ["AdaptivePolicy", "RetuneEvent", "RequestClass",
+           "SpeculationPolicy", "layer_value"]
 
 
 def _pow2_bucket(n: int) -> int:
     """Smallest power of two >= n (shape-class coarsening)."""
     return 1 << max(0, int(n - 1).bit_length())
+
+
+def layer_value(code, m_done: int) -> float:
+    """Marginal value of the *next* completion to the SAC decode, in [0, 1].
+
+    Successive approximation makes completions unequally valuable: with
+    ``m_done`` shards in hand, the next one is worth
+
+    * ``0.0`` once ``m_done >= R`` — the decode is already exact;
+    * ``1.0`` when it finishes a resolution boundary — it reaches the first
+      estimate (``m_done + 1 <= F``) or exactness (``m_done + 1 >= R``);
+    * otherwise the fraction of the remaining refinement ladder it climbs,
+      ``(R - m_done) / (R - F)`` — closer to exactness, more valuable,
+      mirroring the error-vs-m staircase of the layered code.
+
+    An uncoded/one-shot code (``F == R``) only ever returns 0 or 1: every
+    completion before R is a full boundary.
+    """
+    F = int(code.first_threshold)
+    R = int(code.recovery_threshold)
+    m = int(m_done)
+    if m >= R:
+        return 0.0
+    if m + 1 >= R or m + 1 <= F:
+        return 1.0
+    return float(R - m) / float(max(R - F, 1))
+
+
+@dataclass
+class SpeculationPolicy:
+    """The hedging trigger: when is a pending shard worth a second copy?
+
+    Consulted by the serving loop between events.  With a fitted
+    :class:`~repro.design.profile.StragglerProfile` the rule is the paper's
+    latency-quantile trigger: hedge when
+
+    ``P(shard finishes by the deadline │ survived this long)
+    < threshold × layer_value(code, m_done)``
+
+    — a shard whose completion would finish a resolution layer is hedged
+    eagerly; one the decode barely needs must look nearly hopeless first.
+    Before any profile exists (cold start) the Spark-style rule applies:
+    hedge once at least ``min_done_frac`` of the copies are in *and* the
+    batch has run ``cold_multiple`` × the median observed completion time.
+
+    ``max_per_batch`` caps speculative launches per batch (``None``:
+    unbounded); ``poll`` is how often the serving loop wakes to evaluate
+    the trigger while the stream is quiet.
+    """
+
+    threshold: float = 0.5
+    cold_multiple: float = 1.5
+    min_done_frac: float = 0.5
+    max_per_batch: int | None = None
+    poll: float = 0.02
+
+    def should_speculate(self, *, code, m_done: int, elapsed: float,
+                         deadline: float, done_times, n_pending: int,
+                         profile=None, shard: int | None = None) -> bool:
+        lv = layer_value(code, m_done)
+        if lv <= 0.0:
+            return False
+        if profile is not None:
+            p = profile.p_finish_by(deadline, elapsed=float(elapsed),
+                                    shard=shard)
+            return p < self.threshold * lv
+        done = np.asarray(list(done_times), dtype=np.float64)
+        n_done = done.size
+        if n_done == 0 or n_done + n_pending == 0:
+            return False
+        if n_done / (n_done + n_pending) < self.min_done_frac:
+            return False
+        return float(elapsed) > self.cold_multiple * float(np.median(done))
 
 
 @dataclass(frozen=True)

@@ -144,6 +144,46 @@ class StragglerProfile:
         return CompletionBatch(orders=np.argsort(t, axis=1, kind="stable"),
                                times=t)
 
+    def p_finish_by(self, t: float, *, elapsed: float = 0.0,
+                    shard: int | None = None) -> float:
+        """P(completion ≤ ``t`` │ still running at ``elapsed``).
+
+        The speculation trigger: a shard that has already run ``elapsed``
+        seconds without finishing gets its finish probability *conditioned*
+        on that survival.  ``shard`` selects the per-worker column marginal
+        when the empirical observation matrix is kept (heterogeneous
+        fleets); otherwise the pooled/parametric model answers.
+
+        Shifted-exp uses the conditional survival ``1 - S(t)/S(elapsed)``
+        with ``S(x) = exp(-rate·max(0, x-shift))``.  The empirical model
+        answers with the fraction of observed survivors past ``elapsed``
+        that finish by ``t`` — and ``0.0`` when *no* observation survives
+        past ``elapsed`` (the shard has outlived everything ever seen:
+        treat it as hung).
+        """
+        t = float(t)
+        elapsed = float(elapsed)
+        if t <= elapsed:
+            return 0.0
+        if self.kind == "shifted_exp":
+            s_now = np.exp(-self.rate * max(0.0, elapsed - self.shift))
+            if s_now <= 0.0:
+                return 1.0
+            s_t = np.exp(-self.rate * max(0.0, t - self.shift))
+            return float(1.0 - s_t / s_now)
+        sample = self.sample
+        if sample is None:
+            raise ValueError("empirical profile lost its sample; refit")
+        if (shard is not None and sample.ndim == 2
+                and 0 <= int(shard) < sample.shape[1]):
+            col = sample[:, int(shard)]
+        else:
+            col = sample.ravel()
+        alive = col[col > elapsed]
+        if alive.size == 0:
+            return 0.0
+        return float(np.mean(alive <= t))
+
     def expected_latency(self) -> float:
         """``E[t]`` under the fitted model — the scalar the scale-out hook
         compares across refits (``shift + 1/rate`` parametrically, the

@@ -57,10 +57,29 @@ backend)::
     PYTHONPATH=src python -m repro.launch.serve --backend cluster \
         --code matdot --K 2 --N 4 --workers 4 --spares 1 \
         --chaos crash:1,sleep:0.01:0.05 --requests 4 --rows 16 --inner 64
+
+Speculative execution (``--speculate``, cluster backend): the scheduler
+watches the live event stream and re-dispatches a still-pending shard to a
+freshly leased backup worker when the straggler profile says it is unlikely
+to finish before the deadline relative to the marginal value of its
+resolution layer (``--hedge-threshold``).  First completion wins, losing
+copies are cancelled (counted separately from losses), and crashed workers'
+shards are re-queued to their replacements instead of abandoned.
+``--replicate r`` instead pins ``r-1`` up-front copies of every shard — the
+classic replication baseline the paper compares SAC against::
+
+    PYTHONPATH=src python -m repro.launch.serve --backend cluster \
+        --code matdot --K 2 --N 4 --workers 4 --chaos crash:1 \
+        --speculate --requests 4 --rows 16 --inner 64
+
+Flags are grouped (fleet / chaos / autotune / speculation); illegal
+combinations are reported together up front, and the effective config is
+emitted as one ``[serve] config {...}`` JSON line for CI greps.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 from dataclasses import dataclass
@@ -70,11 +89,11 @@ import numpy as np
 
 from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
                         MatDotCode, x_complex)
-from repro.serving import (AsyncMasterScheduler, DecodeWeightCache,
-                           MasterScheduler, ServeConfig, make_backend,
-                           serve_request)
+from repro.serving import (DecodeWeightCache, MasterScheduler, ServeConfig,
+                           make_backend, serve_request)
 
-__all__ = ["CODES", "build_code", "validate_args", "serve_request", "main"]
+__all__ = ["CODES", "build_code", "build_parser", "validate_args",
+           "serve_request", "main"]
 
 
 def _auto_groups(K: int) -> list[int]:
@@ -159,7 +178,8 @@ def build_code(code: str, K: int, N: int):
     return CODES[code].build(K, N)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The serving CLI, flags organized into argument groups."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--code", default="gsac_k1_5", choices=sorted(CODES))
     ap.add_argument("--K", type=int, default=8)
@@ -179,87 +199,208 @@ def main(argv=None):
                     choices=("incremental", "recompute"),
                     help="streaming decoder or the per-tick re-decode "
                     "baseline")
-    ap.add_argument("--backend", default="sim",
-                    choices=("sim", "device", "cluster"),
-                    help="simulated numpy workers, the jax device kernels, "
-                    "or a real multiprocess worker pool")
-    ap.add_argument("--workers", type=int, default=4,
-                    help="cluster: starting worker-pool size (grows on "
-                    "demand — the scale-out path)")
-    ap.add_argument("--spares", type=int, default=0,
-                    help="cluster: warm spare workers kept after releases")
-    ap.add_argument("--chaos", default=None,
-                    help="cluster: injected perturbations, e.g. "
-                    "'crash:1,sleep:0.01:0.05,slow:2:0.3,hang:1'")
-    ap.add_argument("--grace", type=float, default=2.0,
-                    help="cluster: seconds past the last deadline before "
-                    "pending shards are abandoned (hang bound)")
-    ap.add_argument("--record", default=None, metavar="PATH",
-                    help="cluster: save the measured completion trace as "
-                    "JSON for --replay")
-    ap.add_argument("--replay", default=None, metavar="PATH",
-                    help="re-serve a recorded cluster trace through the "
-                    "simulated product path (bit-identical decode)")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="decode-weight LRU entries (0 disables)")
     ap.add_argument("--class-cache", type=int, default=0,
                     help="per-request-class decode-weight sub-budget "
                     "(entries per class; 0 = one shared LRU)")
-    ap.add_argument("--autotune", action="store_true",
-                    help="refit a straggler profile online and switch to "
-                    "the Pareto-optimal code for the accuracy target")
-    ap.add_argument("--target-error", type=float, default=1e-2,
-                    help="autotune accuracy target (relative error)")
-    ap.add_argument("--profile-window", type=int, default=16,
-                    help="requests between autotune profile refits (the "
-                    "cold-start gate when --drift is set)")
-    ap.add_argument("--drift", default="none",
-                    choices=("none", "ks", "page_hinkley"),
-                    help="refit on detected completion-time drift instead "
-                    "of every fixed window")
-    ap.add_argument("--drift-alpha", type=float, default=0.01,
-                    help="KS drift test significance level")
-    ap.add_argument("--per-class", action="store_true",
-                    help="separate straggler profiles and code picks per "
-                    "request class (rows bucket, inner dim, dtype)")
-    ap.add_argument("--cost-aware", action="store_true",
-                    help="pick the cheapest fleet meeting --target-error "
-                    "instead of max accuracy at pinned N")
-    ap.add_argument("--scale-out", action="store_true",
-                    help="let a drift-detected tail worsening request a "
-                    "larger fleet (with --backend cluster the pool "
-                    "acquires the workers)")
-    ap.add_argument("--N-options", default=None,
-                    help="comma-separated candidate fleet sizes for the "
-                    "cost axis (default: pinned --N)")
-    ap.add_argument("--profile-state", default=None, metavar="PATH",
-                    help="JSON snapshot of fitted profiles + sweep caches; "
-                    "loaded at start if present, saved on exit")
-    ap.add_argument("--fleet", type=int, default=None,
-                    help="dispatch only the first N encode shards of the "
-                    "starting code (operator override)")
-    args = ap.parse_args(argv)
 
+    fleet = ap.add_argument_group(
+        "fleet", "execution backend and worker-pool sizing")
+    fleet.add_argument("--backend", default="sim",
+                       choices=("sim", "device", "cluster"),
+                       help="simulated numpy workers, the jax device "
+                       "kernels, or a real multiprocess worker pool")
+    fleet.add_argument("--workers", type=int, default=4,
+                       help="cluster: starting worker-pool size (grows on "
+                       "demand — the scale-out path)")
+    fleet.add_argument("--spares", type=int, default=0,
+                       help="cluster: warm spare workers kept after "
+                       "releases")
+    fleet.add_argument("--grace", type=float, default=2.0,
+                       help="cluster: seconds past the last deadline before "
+                       "pending shards are abandoned (hang bound)")
+    fleet.add_argument("--fleet", type=int, default=None,
+                       help="dispatch only the first N encode shards of the "
+                       "starting code (operator override)")
+
+    chaos = ap.add_argument_group(
+        "chaos", "fault injection and trace record/replay")
+    chaos.add_argument("--chaos", default=None,
+                       help="cluster: injected perturbations, e.g. "
+                       "'crash:1,sleep:0.01:0.05,slow:2:0.3,hang:1'")
+    chaos.add_argument("--record", default=None, metavar="PATH",
+                       help="cluster: save the measured completion trace as "
+                       "JSON for --replay")
+    chaos.add_argument("--replay", default=None, metavar="PATH",
+                       help="re-serve a recorded cluster trace through the "
+                       "simulated product path (bit-identical decode)")
+
+    tune = ap.add_argument_group(
+        "autotune", "online straggler-profile refits and code switches")
+    tune.add_argument("--autotune", action="store_true",
+                      help="refit a straggler profile online and switch to "
+                      "the Pareto-optimal code for the accuracy target")
+    tune.add_argument("--target-error", type=float, default=1e-2,
+                      help="autotune accuracy target (relative error)")
+    tune.add_argument("--profile-window", type=int, default=16,
+                      help="requests between autotune profile refits (the "
+                      "cold-start gate when --drift is set)")
+    tune.add_argument("--drift", default="none",
+                      choices=("none", "ks", "page_hinkley"),
+                      help="refit on detected completion-time drift instead "
+                      "of every fixed window")
+    tune.add_argument("--drift-alpha", type=float, default=0.01,
+                      help="KS drift test significance level")
+    tune.add_argument("--per-class", action="store_true",
+                      help="separate straggler profiles and code picks per "
+                      "request class (rows bucket, inner dim, dtype)")
+    tune.add_argument("--cost-aware", action="store_true",
+                      help="pick the cheapest fleet meeting --target-error "
+                      "instead of max accuracy at pinned N")
+    tune.add_argument("--scale-out", action="store_true",
+                      help="let a drift-detected tail worsening request a "
+                      "larger fleet (with --backend cluster the pool "
+                      "acquires the workers)")
+    tune.add_argument("--N-options", default=None,
+                      help="comma-separated candidate fleet sizes for the "
+                      "cost axis (default: pinned --N)")
+    tune.add_argument("--profile-state", default=None, metavar="PATH",
+                      help="JSON snapshot of fitted profiles + sweep "
+                      "caches; loaded at start if present, saved on exit")
+
+    spec = ap.add_argument_group(
+        "speculation", "mid-batch shard re-dispatch (hedging) and the "
+        "pinned-replication baseline")
+    spec.add_argument("--speculate", action="store_true",
+                      help="re-dispatch likely-late shards to backup "
+                      "workers mid-batch; first completion wins, crashed "
+                      "workers' shards re-queue to their replacements")
+    spec.add_argument("--hedge-threshold", type=float, default=0.5,
+                      help="hedge when P(finish by deadline) < threshold × "
+                      "layer value of the shard's next completion")
+    spec.add_argument("--max-speculations", type=int, default=None,
+                      help="cap on speculative launches per batch "
+                      "(default: unbounded)")
+    spec.add_argument("--replicate", type=int, default=1,
+                      help="pin r-1 up-front copies of every shard — the "
+                      "replication baseline, no hedging policy in the loop")
+    spec.add_argument("--max-requeue", type=int, default=3,
+                      help="dispatch attempts per shard before a crashed "
+                      "chain is declared lost (--speculate)")
+    return ap
+
+
+def _collect_problems(args) -> list[str]:
+    """Every illegal flag combination at once, with actionable messages."""
+    problems = []
     if args.inner % args.K != 0:
-        raise SystemExit(f"[serve] invalid arguments:\n  --inner "
-                         f"{args.inner} must be divisible by --K {args.K} "
-                         "(the contraction dim splits into K blocks)")
+        problems.append(f"--inner {args.inner} must be divisible by --K "
+                        f"{args.K} (the contraction dim splits into K "
+                        "blocks)")
     if args.batch_size < 1:
-        raise SystemExit(f"[serve] invalid arguments:\n  --batch-size must "
-                         f"be >= 1; got {args.batch_size}")
-    code = build_code(args.code, args.K, args.N)
-    deadlines = tuple(float(x) for x in args.deadlines.split(","))
+        problems.append(f"--batch-size must be >= 1; got {args.batch_size}")
+    if args.class_cache < 0:
+        problems.append(f"--class-cache must be >= 0; got "
+                        f"{args.class_cache}")
+    problems.extend(validate_args(args.code, args.K, args.N))
     for flag, name in ((args.chaos is not None, "--chaos"),
                        (args.record is not None, "--record"),
                        (args.spares != 0, "--spares")):
         if flag and args.backend != "cluster":
-            raise SystemExit(f"[serve] invalid arguments:\n  {name} "
-                             "requires --backend cluster")
+            problems.append(f"{name} requires --backend cluster")
+    if args.replay is not None and args.backend != "sim":
+        problems.append(f"--replay re-serves the trace through the "
+                        f"simulated product path; drop --backend "
+                        f"{args.backend}")
+    # speculation group: hedging needs real in-flight shards (cluster) or a
+    # recorded trace of a speculative run (replay); modeled backends have
+    # nothing to re-dispatch
+    if args.speculate and args.backend != "cluster" and args.replay is None:
+        problems.append("--speculate requires --backend cluster (live "
+                        "hedging) or --replay PATH (re-serving a recorded "
+                        "speculative trace)")
+    if args.replicate < 1:
+        problems.append(f"--replicate must be >= 1; got {args.replicate}")
+    elif args.replicate > 1 and args.backend != "cluster":
+        problems.append("--replicate requires --backend cluster (pinned "
+                        "copies run on real backup workers)")
+    if not args.speculate:
+        if args.hedge_threshold != 0.5:
+            problems.append("--hedge-threshold requires --speculate")
+        if args.max_speculations is not None:
+            problems.append("--max-speculations requires --speculate")
+    if args.max_requeue < 1:
+        problems.append(f"--max-requeue must be >= 1; got "
+                        f"{args.max_requeue}")
+    for flag, name in ((args.drift != "none", "--drift"),
+                       (args.per_class, "--per-class"),
+                       (args.cost_aware, "--cost-aware"),
+                       (args.scale_out, "--scale-out"),
+                       (args.N_options is not None, "--N-options"),
+                       (args.profile_state is not None, "--profile-state")):
+        if flag and not args.autotune:
+            problems.append(f"{name} requires --autotune")
+    if args.autotune and args.profile_window < 1:
+        problems.append(f"--profile-window must be >= 1; got "
+                        f"{args.profile_window}")
+    if args.N_options is not None:
+        try:
+            N_options = tuple(int(x) for x in args.N_options.split(","))
+        except ValueError:
+            problems.append(f"--N-options must be comma-separated "
+                            f"integers; got {args.N_options!r}")
+        else:
+            # the cluster backend has a worker acquisition story, so fleet
+            # candidates above the starting --N are servable (the pool
+            # grows); modeled backends stay bounded by the starting fleet
+            if args.backend == "cluster":
+                if any(n < 1 for n in N_options):
+                    problems.append(f"every --N-options entry must be >= 1; "
+                                    f"got {list(N_options)}")
+            elif any(n < 1 or n > args.N for n in N_options):
+                problems.append(f"every --N-options entry must be in [1, "
+                                f"--N {args.N}] on backend "
+                                f"{args.backend!r} (only the cluster "
+                                f"backend can acquire workers past --N); "
+                                f"got {list(N_options)}")
+    return problems
+
+
+def _effective_config(args, deadlines) -> str:
+    """One JSON line of the effective configuration (CI greps this)."""
+    cfg = {"code": args.code, "K": args.K, "N": args.N,
+           "backend": args.backend if args.replay is None else "replay",
+           "requests": args.requests, "batch_size": args.batch_size,
+           "decoder": args.decoder, "deadlines": list(deadlines),
+           "seed": args.seed, "stream": bool(args.stream),
+           "autotune": bool(args.autotune),
+           "speculate": bool(args.speculate),
+           "replicate": args.replicate}
+    if args.backend == "cluster":
+        cfg.update(workers=args.workers, spares=args.spares,
+                   chaos=args.chaos, grace=args.grace)
+    if args.speculate:
+        cfg.update(hedge_threshold=args.hedge_threshold,
+                   max_speculations=args.max_speculations,
+                   max_requeue=args.max_requeue)
+    if args.autotune:
+        cfg.update(target_error=args.target_error,
+                   profile_window=args.profile_window, drift=args.drift)
+    return json.dumps(cfg, sort_keys=True)
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+
+    problems = _collect_problems(args)
+    if problems:
+        raise SystemExit("[serve] invalid arguments:\n  " +
+                         "\n  ".join(problems))
+    code = CODES[args.code].build(args.K, args.N)
+    deadlines = tuple(float(x) for x in args.deadlines.split(","))
+    print(f"[serve] config {_effective_config(args, deadlines)}")
     if args.replay is not None:
-        if args.backend != "sim":
-            raise SystemExit(f"[serve] invalid arguments:\n  --replay "
-                             f"re-serves the trace through the simulated "
-                             f"product path; drop --backend {args.backend}")
         from repro.cluster import TraceRecording
         try:
             recording = TraceRecording.load(args.replay)
@@ -271,7 +412,9 @@ def main(argv=None):
             backend = make_backend(
                 "cluster", workers=args.workers, spares=args.spares,
                 chaos=args.chaos, seed=args.seed,
-                record=args.record is not None, grace=args.grace)
+                record=args.record is not None, grace=args.grace,
+                speculate=args.speculate, replicate=args.replicate,
+                max_requeue=args.max_requeue)
         except ValueError as e:
             raise SystemExit(f"[serve] invalid arguments:\n  {e}")
     else:
@@ -280,9 +423,6 @@ def main(argv=None):
     cfg = ServeConfig(deadlines=deadlines, stream=args.stream,
                       batch_size=args.batch_size, beta_mode=args.beta,
                       decoder=args.decoder, seed=args.seed)
-    if args.class_cache < 0:
-        raise SystemExit(f"[serve] invalid arguments:\n  --class-cache "
-                         f"must be >= 0; got {args.class_cache}")
     # the recompute baseline never consults the cache — don't create one,
     # so the stats line only prints when caching is actually in play
     cache = DecodeWeightCache(args.cache_size,
@@ -290,44 +430,12 @@ def main(argv=None):
                               track_classes=args.class_cache > 0
                               or args.per_class) \
         if args.cache_size > 0 and args.decoder == "incremental" else None
-    for flag, name in ((args.drift != "none", "--drift"),
-                       (args.per_class, "--per-class"),
-                       (args.cost_aware, "--cost-aware"),
-                       (args.scale_out, "--scale-out"),
-                       (args.N_options is not None, "--N-options"),
-                       (args.profile_state is not None, "--profile-state")):
-        if flag and not args.autotune:
-            raise SystemExit(f"[serve] invalid arguments:\n  {name} "
-                             "requires --autotune")
     policy = None
     if args.autotune:
-        if args.profile_window < 1:
-            raise SystemExit(f"[serve] invalid arguments:\n  "
-                             f"--profile-window must be >= 1; got "
-                             f"{args.profile_window}")
         from repro.design import AdaptivePolicy, CodeSpace
         N_options = None
         if args.N_options is not None:
-            try:
-                N_options = tuple(int(x) for x in args.N_options.split(","))
-            except ValueError:
-                raise SystemExit(f"[serve] invalid arguments:\n  "
-                                 f"--N-options must be comma-separated "
-                                 f"integers; got {args.N_options!r}")
-            # the cluster backend has a worker acquisition story, so fleet
-            # candidates above the starting --N are servable (the pool
-            # grows); modeled backends stay bounded by the starting fleet
-            if args.backend == "cluster":
-                if any(n < 1 for n in N_options):
-                    raise SystemExit(f"[serve] invalid arguments:\n  every "
-                                     f"--N-options entry must be >= 1; got "
-                                     f"{list(N_options)}")
-            elif any(n < 1 or n > args.N for n in N_options):
-                raise SystemExit(f"[serve] invalid arguments:\n  every "
-                                 f"--N-options entry must be in [1, --N "
-                                 f"{args.N}] on backend {args.backend!r} "
-                                 f"(only the cluster backend can acquire "
-                                 f"workers past --N); got {list(N_options)}")
+            N_options = tuple(int(x) for x in args.N_options.split(","))
         drift = None if args.drift == "none" else args.drift
         drift_kw = {"alpha": args.drift_alpha} if drift == "ks" else {}
         policy = AdaptivePolicy(
@@ -337,9 +445,14 @@ def main(argv=None):
             window=args.profile_window, seed=args.seed, drift=drift,
             drift_kw=drift_kw, per_class=args.per_class,
             cost_aware=args.cost_aware, scale_out=args.scale_out)
-    sched_cls = AsyncMasterScheduler if args.backend == "cluster" \
-        else MasterScheduler
-    sched = sched_cls(code, backend, cfg, cache, policy=policy)
+    speculation = None
+    if args.speculate:
+        from repro.design import SpeculationPolicy
+        speculation = SpeculationPolicy(
+            threshold=args.hedge_threshold,
+            max_per_batch=args.max_speculations)
+    sched = MasterScheduler(code, backend, cfg, cache, policy=policy,
+                            speculation=speculation)
     if args.profile_state is not None and os.path.exists(args.profile_state):
         from repro.design import load_state
         try:
@@ -464,6 +577,19 @@ def main(argv=None):
             lost = ", ".join(f"batch {b} shard {s} ({why})"
                              for b, s, why in sched.losses)
             print(f"[serve] lost shards: {lost}")
+        if args.speculate or args.replicate > 1:
+            by_reason = {}
+            for _, _, why in sched.speculations:
+                by_reason[why] = by_reason.get(why, 0) + 1
+            detail = ", ".join(f"{n} {why}" for why, n
+                               in sorted(by_reason.items())) or "none"
+            print(f"[serve] re-dispatch: {len(sched.speculations)} "
+                  f"speculative launch(es) ({detail}); "
+                  f"{ps['shards_requeued']} re-queued, "
+                  f"{ps['backups_leased']} backup(s) leased")
+            print(f"[serve] cancelled: {ps['shards_cancelled']} first-wins "
+                  f"loser(s), {ps['duplicates_reaped']} duplicate "
+                  f"result(s) reaped")
         if args.record is not None:
             backend.recording.save(args.record)
             print(f"[serve] recorded {len(backend.recording)} batch "

@@ -12,16 +12,20 @@ reports in — served incrementally:
 * :class:`DecodeWeightCache` — service-wide LRU over
   ``(code, completed-set, m, β-mode)`` so repeated straggler patterns skip
   the Vandermonde solve.
-* :class:`SimulatedBackend` / :class:`DeviceBackend` — the execution seam:
-  shifted-exponential simulated workers, or real devices through the
-  coded-matmul kernel ops and ``runtime/coded.py``'s weighted-psum decode.
+* :class:`ExecutionBackend` — the execution seam: every backend exposes the
+  event-stream ``dispatch_batch`` contract.  Modeled backends
+  (:class:`SimulatedBackend`'s shifted-exponential workers,
+  :class:`DeviceBackend`'s coded-matmul kernel ops) implement the
+  ``compute_products``/``draw_latencies`` hooks and inherit a
+  :class:`SyntheticDispatch` adapter; the cluster backend streams measured
+  completions from real processes through the same surface.
 
 ``launch/serve.py`` and ``examples/coded_matmul_service.py`` are thin CLIs
 over this package; ``benchmarks/serve_throughput.py`` measures it against
 the per-deadline-recompute baseline.
 """
 from .backends import (BACKEND_NAMES, DeviceBackend, ExecutionBackend,
-                       SimulatedBackend, make_backend)
+                       SimulatedBackend, SyntheticDispatch, make_backend)
 from .cache import DecodeWeightCache
 from .incremental import IncrementalDecoder, RecomputeDecoder, make_decoder
 from .master import (Answer, AsyncMasterScheduler, MasterScheduler,
@@ -29,7 +33,8 @@ from .master import (Answer, AsyncMasterScheduler, MasterScheduler,
                      merged_event_stream, serve_request)
 
 __all__ = [
-    "ExecutionBackend", "SimulatedBackend", "DeviceBackend", "make_backend",
+    "ExecutionBackend", "SyntheticDispatch", "SimulatedBackend",
+    "DeviceBackend", "make_backend",
     "BACKEND_NAMES", "DecodeWeightCache", "IncrementalDecoder",
     "RecomputeDecoder", "make_decoder", "MasterScheduler",
     "AsyncMasterScheduler", "MatmulRequest", "ServeConfig", "Answer",

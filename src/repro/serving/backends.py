@@ -1,8 +1,15 @@
 """Execution backends: where the coded worker products actually run.
 
-The master scheduler is backend-agnostic — it hands a batch of requests to a
-backend and gets back the ``(B, N, Nx, Ny)`` product stack plus per-worker
-completion times for the event loop:
+Every backend exposes ONE serving contract — the event stream.  The master
+hands a batch of requests to :meth:`ExecutionBackend.dispatch_batch` and
+walks the returned handle's ``next_event`` stream: each ``done`` event
+carries one shard's ``(B, Nx, Ny)`` product stack and a completion
+timestamp, each ``lost`` event a shard that will never arrive.  Modeled
+backends satisfy the contract through :class:`SyntheticDispatch` — products
+are computed up front and one latency draw is unrolled into a synthetic
+event sequence (time-ordered, ties in stable shard order, non-finite times
+becoming ``lost`` events), so the scheduler's single event loop serves
+simulation, device, cluster, and replay identically:
 
 * :class:`SimulatedBackend` — host numpy products + shifted-exponential
   latencies (the paper's §V serving model, with optional persistent
@@ -10,50 +17,152 @@ completion times for the event loop:
 * :class:`DeviceBackend`   — products computed on the jax device via the
   coded-matmul kernel ops (Pallas on TPU, jnp elsewhere); complex evaluation
   points go through the re/im 4×-real-GEMM expansion so the device never
-  sees complex dtypes.  ``decode_on_mesh`` closes the loop end-to-end: the
-  current (real) decode-weight vector from the incremental decoder becomes
-  the weighted-psum reduction of ``runtime/coded.py``.
+  sees complex dtypes.  ``decode_on_mesh`` closes the loop end-to-end.
+* :class:`repro.cluster.backend.ClusterBackend` (``make_backend("cluster")``)
+  — real worker-pool processes; the event stream is *measured*, and
+  supports mid-batch speculative re-dispatch.
+* ``make_backend("replay")`` — re-serves a recorded cluster trace through
+  the simulated product path, bit-identically.
 
-Latencies stay a *model* on these two backends.  The seam where a real
-cluster's completion reports plug in is now closed by
-:class:`repro.cluster.backend.ClusterBackend` (``make_backend("cluster")``):
-worker-pool processes compute the shards and the serving loop walks
-*measured* arrival events; ``make_backend("replay")`` re-serves a recorded
-cluster trace through the simulated product path, bit-identically.
+The legacy two-call ``batch_products`` / ``sample_latencies`` protocol is
+kept only as a deprecated shim for external callers (it warns and delegates
+to the :meth:`~ExecutionBackend.compute_products` /
+:meth:`~ExecutionBackend.draw_latencies` hooks the synthetic adapter is
+built from); nothing inside the repo drives it anymore.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
+from ..cluster.events import ShardEvent
 from ..core.codes.base import CDCCode
 from ..core.partition import split_contraction
 from ..core.straggler import (sample_times, shifted_exp_times,
                               validate_latency_kw)
 
-__all__ = ["ExecutionBackend", "SimulatedBackend", "DeviceBackend",
-           "make_backend", "BACKEND_NAMES"]
+__all__ = ["ExecutionBackend", "SyntheticDispatch", "SimulatedBackend",
+           "DeviceBackend", "make_backend", "BACKEND_NAMES"]
+
+_TWO_CALL_DEPRECATION = (
+    "the two-call batch_products/sample_latencies backend protocol is "
+    "deprecated; use dispatch_batch(code, As, Bs, n_shards=..., rng=...) "
+    "and walk the returned event stream (or call the compute_products/"
+    "draw_latencies hooks directly)")
+
+
+class SyntheticDispatch:
+    """Event-stream adapter over modeled products + one latency draw.
+
+    Presents the live-dispatch surface (``next_event`` / ``outstanding`` /
+    ``elapsed()`` / ``set_abandon`` / ``finalize()``) over a completion
+    process that is already fully determined: the latency row is unrolled
+    into time-ordered events (stable shard order on ties — exactly the
+    ``argsort`` the legacy two-call path used, so replays stay
+    bit-identical), non-finite times become ``lost`` events delivered after
+    every completion, and ``elapsed()`` is the synthetic clock of the last
+    delivered event.  ``next_event`` never blocks: the modeled stream has
+    nothing to wait for.
+    """
+
+    def __init__(self, products: np.ndarray, times: np.ndarray):
+        times = np.asarray(times, dtype=np.float64)
+        self.n_shards = int(times.shape[0])
+        events = []
+        for i in np.argsort(times, kind="stable"):
+            shard = int(i)
+            t = float(times[shard])
+            if np.isfinite(t):
+                events.append(ShardEvent(kind="done", shard=shard, t=t,
+                                         worker=shard,
+                                         products=products[:, shard]))
+            else:
+                events.append(ShardEvent(kind="lost", shard=shard, t=t,
+                                         worker=shard, reason="missing"))
+        self._events = events
+        self._cursor = 0
+        self._elapsed = 0.0
+
+    # ------------------------------------------------------------------ time
+    def elapsed(self) -> float:
+        return self._elapsed
+
+    # ------------------------------------------------------------ event pump
+    @property
+    def outstanding(self) -> int:
+        return len(self._events) - self._cursor
+
+    def set_abandon(self, t: float | None) -> None:
+        """No-op: a modeled stream already encodes losses as non-finite."""
+
+    def next_event(self, timeout: float | None = None) -> ShardEvent | None:
+        if self._cursor >= len(self._events):
+            return None
+        ev = self._events[self._cursor]
+        self._cursor += 1
+        self._elapsed = ev.t
+        return ev
+
+    def finalize(self) -> None:
+        self._cursor = len(self._events)
 
 
 class ExecutionBackend:
-    """Protocol: batched worker products + a completion-time source."""
+    """Base backend: the unified event-stream ``dispatch_batch`` contract.
+
+    Concrete modeled backends implement two hooks — ``compute_products``
+    (the batched worker outputs) and ``draw_latencies`` (one completion-time
+    row per dispatched batch) — and inherit ``dispatch_batch``, which wraps
+    them in a :class:`SyntheticDispatch`.  Live backends (the cluster)
+    override ``dispatch_batch`` wholesale and ignore ``rng``: their
+    completion events are measured, not drawn.
+    """
 
     name = "abstract"
 
-    def batch_products(self, code: CDCCode, As, Bs,
-                       n_shards: int | None = None) -> np.ndarray:
-        """Products for a batch of requests — ``(B, n, Nx, Ny)``.
+    # ------------------------------------------------------ unified contract
+    def dispatch_batch(self, code: CDCCode, As, Bs,
+                       n_shards: int | None = None,
+                       rng: np.random.Generator | None = None):
+        """Dispatch one batch; returns an event-stream handle.
 
         ``n_shards`` is the elastic-fleet knob: dispatch (and compute) only
-        the first ``n_shards`` encode shards instead of all ``code.N`` —
-        workers beyond never exist, and the decode path already tolerates
-        their absence.  ``None`` means the full fleet.
+        the first ``n_shards`` encode shards instead of all ``code.N``.
+        ``rng`` drives the latency draw on modeled backends (one
+        ``draw_latencies`` call per batch, preserving the legacy stream);
+        measured backends ignore it.
         """
+        products = self.compute_products(code, As, Bs, n_shards)
+        if rng is None:
+            rng = np.random.default_rng()
+        times = self.draw_latencies(rng, products.shape[1])
+        return SyntheticDispatch(products, times)
+
+    def compute_products(self, code: CDCCode, As, Bs,
+                         n_shards: int | None = None) -> np.ndarray:
+        """Products for a batch of requests — ``(B, n, Nx, Ny)``."""
         raise NotImplementedError
+
+    def draw_latencies(self, rng: np.random.Generator,
+                       N: int) -> np.ndarray:
+        """Per-worker completion times for one dispatched batch."""
+        raise NotImplementedError
+
+    # ------------------------------------------- deprecated two-call protocol
+    def batch_products(self, code: CDCCode, As, Bs,
+                       n_shards: int | None = None) -> np.ndarray:
+        """Deprecated shim over :meth:`compute_products`."""
+        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
+                      stacklevel=2)
+        return self.compute_products(code, As, Bs, n_shards)
 
     def sample_latencies(self, rng: np.random.Generator,
                          N: int) -> np.ndarray:
-        """Per-worker completion times for one dispatched batch."""
-        raise NotImplementedError
+        """Deprecated shim over :meth:`draw_latencies`."""
+        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
+                      stacklevel=2)
+        return self.draw_latencies(rng, N)
 
     # shared host-side encode: one einsum over the stacked request blocks
     @staticmethod
@@ -96,13 +205,13 @@ class SimulatedBackend(ExecutionBackend):
         self.model = model                        # the first dispatch
         self.latency_kw = latency_kw
 
-    def batch_products(self, code: CDCCode, As, Bs,
-                       n_shards: int | None = None) -> np.ndarray:
+    def compute_products(self, code: CDCCode, As, Bs,
+                         n_shards: int | None = None) -> np.ndarray:
         E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
         return np.einsum("rnij,rnjl->rnil", E_A, E_B)
 
-    def sample_latencies(self, rng: np.random.Generator,
-                         N: int) -> np.ndarray:
+    def draw_latencies(self, rng: np.random.Generator,
+                       N: int) -> np.ndarray:
         return sample_times(rng, N, model=self.model, **self.latency_kw)
 
 
@@ -127,8 +236,8 @@ class DeviceBackend(ExecutionBackend):
                            "straggler_frac": straggler_frac,
                            "straggler_slowdown": straggler_slowdown}
 
-    def batch_products(self, code: CDCCode, As, Bs,
-                       n_shards: int | None = None) -> np.ndarray:
+    def compute_products(self, code: CDCCode, As, Bs,
+                         n_shards: int | None = None) -> np.ndarray:
         import jax.numpy as jnp
 
         from ..kernels.coded_matmul.ops import (worker_products,
@@ -152,8 +261,8 @@ class DeviceBackend(ExecutionBackend):
                                            use_pallas=self.use_pallas))
         return P.reshape((B, N) + P.shape[1:])
 
-    def sample_latencies(self, rng: np.random.Generator,
-                         N: int) -> np.ndarray:
+    def draw_latencies(self, rng: np.random.Generator,
+                       N: int) -> np.ndarray:
         return shifted_exp_times(rng, N, **self.latency_kw)
 
     @staticmethod

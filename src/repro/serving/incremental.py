@@ -72,8 +72,9 @@ class IncrementalDecoder:
             self._counts = np.zeros(code.K, dtype=np.int64)
         # resolve-regime state: (pre-β estimate, info, scattered weights)
         self._resolved = None
+        self._seen: set[int] = set()
         self.stats = {"push": 0, "rank1": 0, "resolve": 0, "reuse": 0,
-                      "cache_hit": 0}
+                      "cache_hit": 0, "dup_ignored": 0}
 
     # ------------------------------------------------------------- ingestion
     @property
@@ -82,9 +83,19 @@ class IncrementalDecoder:
         return self._m
 
     def push(self, worker: int, product: np.ndarray) -> None:
-        """Ingest worker ``worker``'s product as the next completion."""
+        """Ingest worker ``worker``'s product as the next completion.
+
+        Idempotent per worker: a duplicate completion (a first-wins loser's
+        late result leaking past the dispatch accounting) is ignored — a
+        second rank-1 update for the same shard would double its cluster
+        contribution and silently corrupt every later estimate.
+        """
+        if int(worker) in self._seen:
+            self.stats["dup_ignored"] += 1
+            return
         if self._m >= self.code.N:
             raise ValueError(f"all {self.code.N} workers already completed")
+        self._seen.add(int(worker))
         product = np.asarray(product)
         if self._buf is None:
             dt = np.result_type(product.dtype, np.float64)
@@ -218,15 +229,20 @@ class RecomputeDecoder:
         self._order = np.empty(code.N, dtype=np.int64)
         self._by_worker = None           # (N, Nx, Ny) products by worker id
         self._m = 0
-        self.stats = {"push": 0, "decode": 0}
+        self._seen: set[int] = set()
+        self.stats = {"push": 0, "decode": 0, "dup_ignored": 0}
 
     @property
     def m(self) -> int:
         return self._m
 
     def push(self, worker: int, product: np.ndarray) -> None:
+        if int(worker) in self._seen:     # duplicate completion: idempotent
+            self.stats["dup_ignored"] += 1
+            return
         if self._m >= self.code.N:
             raise ValueError(f"all {self.code.N} workers already completed")
+        self._seen.add(int(worker))
         product = np.asarray(product)
         if self._by_worker is None:
             dt = np.result_type(product.dtype, np.float64)

@@ -3,25 +3,34 @@
 The paper's serving story, productionized: requests enter a queue, the
 master pops them in batches (one encode + one worker dispatch per batch —
 workers compute the stacked products as a single task, so the batch shares
-one latency draw), and answers *stream*: an event loop walks the merged
-sequence of worker completions and deadline ticks, pushing each completed
-product into the request's :class:`IncrementalDecoder` and emitting a
-refined estimate at every tick (and, in ``stream`` mode, at every completion
-event — the paper's successive refinement at its natural granularity).
+one latency draw), and answers *stream*: ONE event loop walks every
+backend's ``dispatch_batch`` event stream — worker completions merged with
+deadline ticks — pushing each completed product into the request's
+:class:`IncrementalDecoder` and emitting a refined estimate at every tick
+(and, in ``stream`` mode, at every completion event — the paper's
+successive refinement at its natural granularity).
 
-Timebase: completion times and deadlines live on the simulated latency
-clock (the shifted-exponential model, per batch); wall-clock throughput of
-the serving loop itself (the thing the incremental decoder accelerates) is
-reported separately by ``benchmarks/serve_throughput.py``.
+Timebase: on modeled backends, completion times and deadlines live on the
+simulated latency clock (the shifted-exponential model, per batch,
+synthesized into events by :class:`~repro.serving.backends
+.SyntheticDispatch`); on the cluster backend the same loop consumes a
+*live* measured stream and deadlines become wall-clock seconds from
+dispatch.  The event ordering honors the ``merged_event_stream`` contract
+(time order; ties resolve completion-before-tick), which is what makes a
+recorded cluster run replay bit-identically through the simulated path.
+Wall-clock throughput of the serving loop itself (the thing the
+incremental decoder accelerates) is reported separately by
+``benchmarks/serve_throughput.py``.
 
-:class:`AsyncMasterScheduler` is the cluster path: the same queue/batch/
-policy surface, but ``_serve_batch`` consumes a *live* completion stream
-from a dispatching backend (``repro.cluster.ClusterBackend``) instead of a
-latency draw — deadlines become wall-clock seconds from dispatch, decoders
-update the moment each shard's product arrives, and answers emit mid-batch.
-The event ordering honors the ``merged_event_stream`` contract (time order;
-ties resolve completion-before-tick), which is what makes a recorded cluster
-run replay bit-identically through the simulated path.
+Speculative re-dispatch (``speculation=``): on a backend whose dispatch
+handle supports mid-batch :meth:`speculate` (the cluster), the loop watches
+the live stream and — when the hedging policy
+(:class:`repro.design.policy.SpeculationPolicy`) says a pending shard is
+unlikely to finish before the deadline relative to the marginal value of
+its resolution layer — re-dispatches the shard to a warm spare.  First
+completion wins; duplicates are cancelled and counted separately from
+losses; crashed workers' shards are re-queued by the dispatch instead of
+abandoned.  :class:`AsyncMasterScheduler` survives as a back-compat alias.
 """
 from __future__ import annotations
 
@@ -122,12 +131,13 @@ class MasterScheduler:
     def __init__(self, code: CDCCode, backend: ExecutionBackend | None = None,
                  config: ServeConfig | None = None,
                  cache: DecodeWeightCache | None = _DEFAULT_CACHE,
-                 policy=None):
+                 policy=None, speculation=None):
         self.code = code
         self.backend = backend if backend is not None else SimulatedBackend()
         self.config = config if config is not None else ServeConfig()
         self.cache = DecodeWeightCache() if cache is _DEFAULT_CACHE else cache
         self.policy = policy
+        self.speculation = speculation         # SpeculationPolicy (or None)
         if self.config.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.config.batch_size}")
@@ -138,6 +148,14 @@ class MasterScheduler:
         self.fleet: int | None = None          # dispatched shards (None=all)
         self.class_codes: dict = {}            # RequestClass -> code override
         self.switches: list[tuple[int, str, str]] = []
+        self.losses: list[tuple[int, int, str]] = []   # (batch#, shard, why)
+        self.speculations: list[tuple[int, int, str]] = []   # re-dispatches
+        self._batches_served = 0
+        # hedge-trigger observation window: recent per-batch completion rows
+        # feed a small straggler fit so the speculation policy has a
+        # P(finish-by-deadline) estimate after the first served batch
+        self._hedge_rows: deque = deque(maxlen=64)
+        self._hedge_fit: tuple[int, object] | None = None
 
     # --------------------------------------------------------------- intake
     def submit(self, A: np.ndarray, B: np.ndarray) -> int:
@@ -319,90 +337,20 @@ class MasterScheduler:
 
     def _serve_batch(self, batch: list[MatmulRequest],
                      cls=None) -> list[RequestResult]:
-        code, cfg = self._code_for(cls), self.config
-        Nf = self._fleet_for(code)
-        products = self.backend.batch_products(
-            code, [r.A for r in batch], [r.B for r in batch],
-            n_shards=Nf if Nf != code.N else None)
-        times = self.backend.sample_latencies(self.rng, Nf)
-        # a non-finite latency means the shard never completes (a replayed
-        # lost shard, a measured hang): it must not enter the event stream,
-        # the profile fit, or the threshold-crossing times — exactly how the
-        # live async path treats a loss, so lossy replays stay bit-identical
-        finite = np.isfinite(times)
-        if finite.any():
-            self._observe(times if finite.all() else times[finite],
-                          len(batch), cls)
-        order = np.argsort(times, kind="stable")
-        t_sorted = times[order]
-        if not finite.all():
-            keep = np.isfinite(t_sorted)
-            order, t_sorted = order[keep], t_sorted[keep]
+        """THE event loop: every backend serves through this one code path.
 
-        refs, decoders, results = self._prepare_batch(batch, code, cfg)
-        first_t, exact_t = self._reach_times(t_sorted, code, Nf)
-        for res in results:
-            res.ttfa = first_t
-            res.t_exact = exact_t
-
-        R = code.recovery_threshold
-        for t, kind, i in merged_event_stream(t_sorted, cfg.deadlines):
-            if kind == 0:                                   # completion event
-                worker = int(order[i])
-                m = i + 1
-                for dec, p in zip(decoders, products):
-                    dec.push(worker, p[worker])
-                if cfg.stream:
-                    self._emit(batch, decoders, refs, results, t, m, R,
-                               "event")
-            else:                                           # deadline tick
-                m = decoders[0].m
-                self._emit(batch, decoders, refs, results, t, m, R,
-                           "deadline")
-        for res, dec in zip(results, decoders):
-            res.decode_stats = dict(dec.stats)
-        return results
-
-    def _emit(self, batch, decoders, refs, results, t, m, R, kind) -> None:
-        for dec, (C, norm, _), res in zip(decoders, refs, results):
-            est = dec.estimate()
-            err = None
-            if est is not None and C is not None and norm > 0.0:
-                err = float(np.linalg.norm(est - C) ** 2 / norm)
-            res.answers.append(Answer(t=t, m=m, rel_err=err,
-                                      exact=m >= R, kind=kind))
-
-
-class AsyncMasterScheduler(MasterScheduler):
-    """Event-driven serving over a live dispatching backend (the cluster).
-
-    The backend must expose ``dispatch_batch(code, As, Bs, n_shards=...)``
-    returning a handle with ``next_event(timeout)`` / ``outstanding`` /
-    ``elapsed()`` / ``set_abandon`` / ``finalize()``
-    (:class:`repro.cluster.backend.ClusterDispatch`); a backend without the
-    live surface falls back to the simulated two-call protocol, so one
-    scheduler class serves both.
-
-    Deadlines are wall-clock seconds from dispatch.  The loop preserves the
-    ``merged_event_stream`` ordering contract: events are timestamped in
-    strictly increasing arrival order, a deadline tick fires after any
-    completion carrying an earlier-or-equal timestamp, and once every shard
-    is resolved the remaining ticks are fully determined and flush without
-    waiting out the wall clock.  Shards whose worker crashed (or that out-
-    live the last deadline by more than the backend's ``grace``) resolve as
-    *lost*: the decode path already tolerates their absence, and the loss is
-    logged in :attr:`losses`.
-    """
-
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        self.losses: list[tuple[int, int, str]] = []   # (batch#, shard, why)
-        self._batches_served = 0
-
-    def _serve_batch(self, batch: list[MatmulRequest],
-                     cls=None) -> list[RequestResult]:
-        if not hasattr(self.backend, "dispatch_batch"):
-            return super()._serve_batch(batch, cls)
+        The backend's ``dispatch_batch`` handle yields ``done`` / ``lost``
+        (and, under speculation, ``redispatch``) events; deadline ticks are
+        merged in honoring the ``merged_event_stream`` contract — events are
+        timestamped in strictly increasing arrival order, a tick fires after
+        any completion carrying an earlier-or-equal timestamp, and once
+        every shard is resolved the remaining ticks are fully determined and
+        flush without waiting out the clock.  On modeled backends the handle
+        is a :class:`~repro.serving.backends.SyntheticDispatch` whose
+        synthetic clock never blocks, so the loop degenerates to exactly the
+        legacy merged-stream walk (bit-identical, pinned by the replay
+        tests); on the cluster it is live and wall-clocked.
+        """
         code, cfg = self._code_for(cls), self.config
         Nf = self._fleet_for(code)
         # reference products / decoders are built *before* the dispatch
@@ -411,12 +359,17 @@ class AsyncMasterScheduler(MasterScheduler):
         refs, decoders, results = self._prepare_batch(batch, code, cfg)
         dispatch = self.backend.dispatch_batch(
             code, [r.A for r in batch], [r.B for r in batch],
-            n_shards=Nf if Nf != code.N else None)
+            n_shards=Nf if Nf != code.N else None, rng=self.rng)
         batch_no = self._batches_served
         self._batches_served += 1
         deadlines = sorted(float(d) for d in cfg.deadlines)
         grace = float(getattr(self.backend, "grace", 2.0))
         dispatch.set_abandon((deadlines[-1] if deadlines else 0.0) + grace)
+        # hedging is live only when both sides opt in: a policy on the
+        # scheduler AND a dispatch that can actually re-dispatch mid-batch
+        poll = float(self.speculation.poll) \
+            if (self.speculation is not None
+                and hasattr(dispatch, "speculate")) else None
         R = code.recovery_threshold
         shard_times: dict[int, float] = {}
         m, di = 0, 0
@@ -424,7 +377,7 @@ class AsyncMasterScheduler(MasterScheduler):
             while di < len(deadlines) or dispatch.outstanding:
                 if not dispatch.outstanding:
                     # every shard resolved: the remaining ticks carry the
-                    # final m whatever the wall clock says — flush them
+                    # final m whatever the clock says — flush them
                     for dl in deadlines[di:]:
                         self._emit(batch, decoders, refs, results, dl, m, R,
                                    "deadline")
@@ -438,9 +391,18 @@ class AsyncMasterScheduler(MasterScheduler):
                                    deadlines[di], m, R, "deadline")
                         di += 1
                         continue
+                if poll is not None:
+                    # cap the wait so hedge triggers are not delayed until
+                    # the next deadline tick
+                    timeout = poll if timeout is None else min(timeout, poll)
                 ev = dispatch.next_event(timeout=timeout)
                 if ev is None:
-                    continue               # deadline reached or spurious wake
+                    # deadline reached or spurious wake — a natural point to
+                    # reconsider hedging the still-pending shards
+                    if poll is not None:
+                        self._maybe_speculate(dispatch, code, m, shard_times,
+                                              deadlines)
+                    continue
                 # stream-contract tie rule: a tick fires after any
                 # completion sharing its timestamp, so strictly-earlier
                 # ticks flush before this event is ingested
@@ -449,6 +411,8 @@ class AsyncMasterScheduler(MasterScheduler):
                                m, R, "deadline")
                     di += 1
                 if ev.kind == "done":
+                    if ev.shard in shard_times:
+                        continue           # defensive: dispatches dedup
                     m += 1
                     for i, dec in enumerate(decoders):
                         dec.push(ev.shard, ev.products[i])
@@ -456,8 +420,13 @@ class AsyncMasterScheduler(MasterScheduler):
                     if cfg.stream:
                         self._emit(batch, decoders, refs, results, ev.t, m,
                                    R, "event")
+                elif ev.kind == "redispatch":      # speculation bookkeeping
+                    self.speculations.append((batch_no, ev.shard, ev.reason))
                 else:                      # lost shard (crash/timeout)
                     self.losses.append((batch_no, ev.shard, ev.reason))
+                if poll is not None:
+                    self._maybe_speculate(dispatch, code, m, shard_times,
+                                          deadlines)
         finally:
             dispatch.finalize()
         t_sorted = np.sort(np.fromiter(shard_times.values(), np.float64,
@@ -478,9 +447,86 @@ class AsyncMasterScheduler(MasterScheduler):
             row = np.asarray(sorted(shard_times.values()), dtype=np.float64)
         if row.size:
             self._observe(row, len(batch), cls)
+            if self.speculation is not None:
+                self._hedge_rows.append(row)
         for res, dec in zip(results, decoders):
             res.decode_stats = dict(dec.stats)
         return results
+
+    # ------------------------------------------------------------ speculation
+    def _hedge_profile(self):
+        """Straggler fit over the recent observation window (or ``None``).
+
+        Refit lazily once per new batch row; lossy batches contribute their
+        pooled finite times (row shapes differ, so the per-shard stack
+        degrades to a flat sample — same rule as the adaptive policy's
+        fleet-switch path).
+        """
+        n = len(self._hedge_rows)
+        if n == 0:
+            return None
+        if self._hedge_fit is not None and self._hedge_fit[0] == n:
+            return self._hedge_fit[1]
+        from ..design.profile import StragglerProfile
+        rows = [np.asarray(r, dtype=np.float64).ravel()
+                for r in self._hedge_rows]
+        profile = None
+        try:
+            if all(r.shape == rows[0].shape for r in rows):
+                profile = StragglerProfile.fit(np.stack(rows))
+            else:
+                profile = StragglerProfile.fit(np.concatenate(rows))
+        except ValueError:
+            profile = None                 # too few observations to fit
+        self._hedge_fit = (n, profile)
+        return profile
+
+    def _maybe_speculate(self, dispatch, code: CDCCode, m: int,
+                         shard_times: dict, deadlines: list) -> None:
+        """Hedge still-pending shards whose completion odds fell too low."""
+        pol = self.speculation
+        pending = getattr(dispatch, "pending", None)
+        if not pending or not deadlines:
+            return
+        cap = pol.max_per_batch
+        elapsed = dispatch.elapsed()
+        profile = self._hedge_profile()
+        done_times = sorted(shard_times.values())
+        for shard in sorted(pending):
+            if cap is not None and dispatch.n_speculated >= cap:
+                return
+            if dispatch.copies_of(shard) > 1:
+                continue                   # one hedge per shard at a time
+            if pol.should_speculate(code=code, m_done=m, elapsed=elapsed,
+                                    deadline=deadlines[-1],
+                                    done_times=done_times,
+                                    n_pending=len(pending),
+                                    profile=profile, shard=shard):
+                if not dispatch.speculate(shard, reason="hedge"):
+                    return                 # no backup available: stop trying
+
+    def _emit(self, batch, decoders, refs, results, t, m, R, kind) -> None:
+        for dec, (C, norm, _), res in zip(decoders, refs, results):
+            est = dec.estimate()
+            err = None
+            if est is not None and C is not None and norm > 0.0:
+                err = float(np.linalg.norm(est - C) ** 2 / norm)
+            res.answers.append(Answer(t=t, m=m, rel_err=err,
+                                      exact=m >= R, kind=kind))
+
+
+class AsyncMasterScheduler(MasterScheduler):
+    """Back-compat alias: the unified event loop absorbed the async path.
+
+    Historically this subclass owned the live-stream serving loop while
+    :class:`MasterScheduler` drove the two-call simulated protocol.  Every
+    backend now exposes the event-stream ``dispatch_batch`` contract
+    (modeled ones through :class:`~repro.serving.backends
+    .SyntheticDispatch`), so the one loop in
+    :meth:`MasterScheduler._serve_batch` serves them all and this class
+    adds nothing.  Kept so existing cluster call sites (and recorded
+    invocations in docs/scripts) keep working unchanged.
+    """
 
 
 def serve_request(code: CDCCode, A, B, rng, *, deadlines,

@@ -20,7 +20,7 @@ import pytest
 from repro.cluster import BatchRecord, ChaosSpec, TraceRecording, WorkerPool
 from repro.cluster.backend import ClusterBackend, ReplayBackend
 from repro.core import GroupSACCode, LayerSACCode, MatDotCode, x_complex
-from repro.design.policy import RequestClass
+from repro.design.policy import RequestClass, SpeculationPolicy
 from repro.serving import (AsyncMasterScheduler, DecodeWeightCache,
                            MasterScheduler, ServeConfig, SimulatedBackend,
                            make_backend)
@@ -122,18 +122,41 @@ def test_pool_heartbeat_and_replacement_after_crash():
 # ------------------------------------------------------- products equivalence
 
 def test_cluster_products_bit_match_simulated():
-    """The sync backend path: worker products == host einsum, bitwise."""
+    """The sync backend path: worker products == host einsum, bitwise.
+
+    This is the one sanctioned call site of the deprecated two-call
+    ``batch_products``/``sample_latencies`` protocol: both shims must emit
+    ``DeprecationWarning`` and still delegate to the unified event-stream
+    dispatch, bit-identically."""
     rng = np.random.default_rng(0)
     code = MatDotCode(K, N, x_complex(N, 0.1))
     As, Bs = zip(*_reqs(rng, 3))
     with ClusterBackend(workers=N, seed=0) as be:
-        got = be.batch_products(code, As, Bs)
-        times = be.sample_latencies(rng, N)
-    want = SimulatedBackend().batch_products(code, As, Bs)
+        with pytest.warns(DeprecationWarning, match="two-call"):
+            got = be.batch_products(code, As, Bs)
+        with pytest.warns(DeprecationWarning, match="two-call"):
+            times = be.sample_latencies(rng, N)
+    want = SimulatedBackend().compute_products(code, As, Bs)
     assert got.dtype == want.dtype
     np.testing.assert_array_equal(got, want)
     assert np.all(np.isfinite(times)) and len(times) == N
     assert np.all(np.diff(np.sort(times)) > 0)    # strictly increasing
+
+
+def test_simulated_two_call_shim_warns_and_delegates():
+    """The base-class shims: same outputs as the unified hooks, plus the
+    deprecation signal external callers migrate on."""
+    rng = np.random.default_rng(0)
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    As, Bs = zip(*_reqs(rng, 2))
+    be = SimulatedBackend()
+    with pytest.warns(DeprecationWarning, match="dispatch_batch"):
+        got = be.batch_products(code, As, Bs)
+    np.testing.assert_array_equal(got, be.compute_products(code, As, Bs))
+    with pytest.warns(DeprecationWarning, match="dispatch_batch"):
+        t_shim = be.sample_latencies(np.random.default_rng(3), N)
+    t_hook = be.draw_latencies(np.random.default_rng(3), N)
+    np.testing.assert_array_equal(t_shim, t_hook)
 
 
 # ------------------------------------------------------ record/replay pinning
@@ -191,17 +214,20 @@ def test_record_replay_bit_identity_with_lost_shards():
 
 
 def test_all_shards_lost_sync_path_stays_bounded():
-    """Every worker crashing must not wedge (or crash) the blocking
-    batch_products protocol: the stack comes back zero-filled, latencies
-    all ``inf``, within the sync timeout."""
+    """Every worker crashing must not wedge (or crash) the blocking drain
+    path: the stack comes back zero-filled, latencies all ``inf``, within
+    the sync timeout."""
     t0 = time.monotonic()
     code = MatDotCode(K, N, x_complex(N, 0.1))
     rng = np.random.default_rng(13)
     As, Bs = zip(*_reqs(rng, 2))
     with ClusterBackend(workers=N, chaos=f"crash:{N}", seed=0,
                         sync_timeout=10.0) as be:
-        out = be.batch_products(code, As, Bs)
-        times = be.sample_latencies(rng, N)
+        d = be.dispatch_batch(code, As, Bs)
+        d.drain(be.sync_timeout)
+        out = d.product_stack()
+        times = d.latency_row()
+        d.finalize()
     assert out.shape == (2, N, 8, 8) and not out.any()
     assert np.isinf(times).all()
     assert time.monotonic() - t0 < 60.0
@@ -212,12 +238,12 @@ def test_replay_backend_guards():
     rec.append(BatchRecord(n_shards=4, times={0: 0.1}))
     rb = ReplayBackend(rec)
     with pytest.raises(ValueError, match="shards"):
-        rb.sample_latencies(np.random.default_rng(0), 6)
+        rb.draw_latencies(np.random.default_rng(0), 6)
     rb = ReplayBackend(rec)
-    row = rb.sample_latencies(np.random.default_rng(0), 4)
+    row = rb.draw_latencies(np.random.default_rng(0), 4)
     assert row[0] == 0.1 and np.isinf(row[1:]).all()
     with pytest.raises(ValueError, match="exhausted"):
-        rb.sample_latencies(np.random.default_rng(0), 4)
+        rb.draw_latencies(np.random.default_rng(0), 4)
 
 
 # -------------------------------------------------------------- chaos serving
@@ -267,11 +293,174 @@ def test_hang_past_deadline_is_abandoned_and_retired():
     assert time.monotonic() - t0 < 60.0
 
 
+# ----------------------------------------------------- speculative re-dispatch
+
+def test_speculate_crash_requeues_shard_no_loss():
+    """``speculate=True`` turns the crash loss into a re-queue: worker 0
+    dies on its first task, the shard is re-sent to its lease slot's
+    replacement, and *nothing* is lost — contrast with
+    ``test_crash_mid_batch_loses_one_shard_and_heals``, the same chaos
+    without speculation (opt-in preserved)."""
+    t0 = time.monotonic()
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(3)
+    cfg = ServeConfig(deadlines=(1.0,), batch_size=2, seed=0)
+    with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
+                        seed=2, grace=3.0, speculate=True) as be:
+        sched = MasterScheduler(code, be, cfg,
+                                speculation=SpeculationPolicy())
+        out = _serve(sched, _reqs(rng, 4))
+        stats = be.pool.stats
+    assert sched.losses == []
+    assert "crash" in {why for _, _, why in sched.speculations}
+    assert stats["shards_requeued"] >= 1
+    assert stats["shards_lost"] == 0           # the re-queue compensated
+    assert stats["replaced"] == 1 and stats["crashed"] == 1
+    for ttfa, t_exact, answers in out:
+        assert t_exact is not None and answers[-1][3]
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_speculate_hedges_hung_shard_backup_wins():
+    """Zero-slack MatDot (N = R = 3) with a hung worker: without a second
+    copy the batch can never go exact.  The hedging policy re-dispatches
+    the lagging shard to a leased backup, the backup's completion wins
+    (flagged ``speculative``), and the hung loser is cancelled — counted
+    apart from losses."""
+    t0 = time.monotonic()
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(5)
+    cfg = ServeConfig(deadlines=(0.5,), batch_size=2, seed=0)
+    with ClusterBackend(workers=3, chaos="hang:1,sleep:0.005:0.02",
+                        seed=4, grace=2.0, speculate=True) as be:
+        sched = MasterScheduler(code, be, cfg,
+                                speculation=SpeculationPolicy())
+        out = _serve(sched, _reqs(rng, 2))
+        stats = be.pool.stats
+    assert "hedge" in {why for _, _, why in sched.speculations}
+    assert sched.losses == []                  # the backup rescued the batch
+    assert stats["backups_leased"] >= 1
+    assert stats["shards_cancelled"] >= 1      # the hung primary lost the race
+    assert stats["shards_lost"] == 0
+    (ttfa, t_exact, answers), *_ = out
+    assert t_exact is not None and answers[-1][1] == 3 and answers[-1][3]
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_speculate_slow_shard_rescued_before_delay():
+    """A persistently slow (not dead) primary: the hedge races a backup
+    against it and the batch reaches exactness well before the slow
+    worker's delay would have allowed."""
+    t0 = time.monotonic()
+    delay = 2.0
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(7)
+    cfg = ServeConfig(deadlines=(0.5,), batch_size=2, seed=0)
+    with ClusterBackend(workers=3, chaos=f"slow:1:{delay},sleep:0.005:0.02",
+                        seed=6, grace=3.0, speculate=True) as be:
+        sched = MasterScheduler(code, be, cfg,
+                                speculation=SpeculationPolicy())
+        out = _serve(sched, _reqs(rng, 2))
+    assert "hedge" in {why for _, _, why in sched.speculations}
+    assert sched.losses == []
+    (ttfa, t_exact, answers), *_ = out
+    assert t_exact is not None and t_exact < delay
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_dispatch_first_wins_cancels_loser_and_reaps_duplicate():
+    """Force-hedge a slow shard: the backup's completion wins and is
+    flagged ``speculative``, the slow primary is cancelled, and its late
+    result is swallowed by the dispatch accounting (``duplicates_reaped``)
+    while a hung shard keeps the stream pumping — the consumer never sees
+    the same shard twice."""
+    t0 = time.monotonic()
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(1)
+    As, Bs = zip(*_reqs(rng, 2))
+    with ClusterBackend(workers=3, chaos="hang:1,slow:1:1.0", seed=0,
+                        speculate=True) as be:
+        d = be.dispatch_batch(code, As, Bs)
+        assert d.speculate(1)              # hedge the slow worker's shard
+        d.set_abandon(2.5)                 # bound the hung shard
+        done, kinds = {}, []
+        while d.outstanding:
+            ev = d.next_event(timeout=5.0)
+            if ev is None:
+                break
+            kinds.append(ev.kind)
+            if ev.kind == "done":
+                assert ev.shard not in done    # delivered at most once
+                done[ev.shard] = ev
+        stats = dict(be.pool.stats)
+        d.finalize()
+    assert kinds.count("redispatch") == 1
+    assert done[1].speculative             # the backup won shard 1
+    assert not done[2].speculative         # untouched shard: primary won
+    assert d.lost == {0: "timeout"}        # the hung shard resolved as loss
+    assert d.record().redispatches == [[1, "hedge"]]
+    assert stats["shards_cancelled"] == 1
+    assert stats["duplicates_reaped"] == 1  # the loser's late result
+    assert stats["shards_lost"] == 1        # hang only; cancel is separate
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_record_replay_bit_identity_speculative_trace():
+    """A trace with mid-batch re-dispatches replays bit-identically: the
+    replay consumes only the final per-shard outcome (the race winner's
+    time), so hedged batches reproduce the live answers exactly — and the
+    ``redispatches`` metadata survives the JSON round-trip."""
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(17)
+    reqs = _reqs(rng, 4)
+    cfg = ServeConfig(deadlines=(0.5,), stream=True, batch_size=2, seed=0)
+    with ClusterBackend(workers=3, chaos="hang:1,sleep:0.005:0.02",
+                        seed=9, grace=2.0, speculate=True, record=True) as be:
+        sched = MasterScheduler(code, be, cfg,
+                                speculation=SpeculationPolicy())
+        live = _serve(sched, reqs)
+        rec = be.recording
+    assert sched.speculations                   # the hedge actually fired
+    assert any(b.redispatches for b in rec.batches)
+    replay = _serve(MasterScheduler(code, ReplayBackend(rec), cfg), reqs)
+    assert live == replay
+
+    rec2 = TraceRecording.from_dict(rec.to_dict())
+    assert [b.redispatches for b in rec2.batches] == \
+        [b.redispatches for b in rec.batches]
+    replay2 = _serve(MasterScheduler(code, ReplayBackend(rec2), cfg), reqs)
+    assert live == replay2
+
+
+def test_replicate_pins_upfront_copies():
+    """``replicate=2`` is the policy-free baseline: every shard gets a
+    second copy at dispatch time, so a crashed primary's shard is still
+    served by its surviving replica — at ~2x worker cost."""
+    t0 = time.monotonic()
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(19)
+    cfg = ServeConfig(deadlines=(0.5,), batch_size=2, seed=0)
+    with ClusterBackend(workers=3, chaos="crash:1,sleep:0.005:0.02",
+                        seed=10, grace=2.0, replicate=2) as be:
+        sched = MasterScheduler(code, be, cfg)
+        out = _serve(sched, _reqs(rng, 2))
+        stats = be.pool.stats
+    assert {why for _, _, why in sched.speculations} == {"replicate"}
+    assert len(sched.speculations) == 3         # one pinned copy per shard
+    assert sched.losses == []
+    assert stats["backups_leased"] >= 3
+    (ttfa, t_exact, answers), *_ = out
+    assert t_exact is not None and answers[-1][3]
+    assert time.monotonic() - t0 < 60.0
+
+
 # ---------------------------------------------- async/sim surface equivalence
 
 def test_async_scheduler_falls_back_on_modeled_backends():
-    """AsyncMasterScheduler over a backend without dispatch_batch serves
-    exactly like MasterScheduler (same rng stream, same answers)."""
+    """AsyncMasterScheduler over a modeled backend (its ``dispatch_batch``
+    is the synthetic-event adapter over ``compute_products`` +
+    ``draw_latencies``) serves exactly like MasterScheduler — same rng
+    stream, same answers: one event loop, no modeled/live fork left."""
     code = MatDotCode(K, 8, x_complex(8, 0.1))
     rng = np.random.default_rng(9)
     reqs = _reqs(rng, 3)

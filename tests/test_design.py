@@ -122,6 +122,94 @@ def test_profile_rejects_bad_input():
         StragglerProfile.fit([1.0, 2.0], kind="nope")
 
 
+def test_profile_p_finish_by_conditional_survival():
+    """The speculation trigger's probability: conditioned on having already
+    survived ``elapsed`` seconds without finishing."""
+    p = StragglerProfile(kind="shifted_exp", shift=1.0, rate=2.0)
+    assert p.p_finish_by(0.5) == 0.0            # nothing beats the shift
+    assert p.p_finish_by(0.8, elapsed=0.9) == 0.0    # t in the past
+    # memoryless past the shift: P(finish by e+d │ alive at e) = 1-e^{-λd}
+    want = 1.0 - np.exp(-2.0 * 0.4)
+    assert abs(p.p_finish_by(2.4, elapsed=2.0) - want) < 1e-12
+    assert abs(p.p_finish_by(1.4, elapsed=0.0)
+               - p.p_finish_by(1.4, elapsed=0.5)) < 1e-12   # pre-shift wait
+    assert p.p_finish_by(40.0, elapsed=2.0) > 0.999
+
+    # empirical: per-shard column marginal, survivors only
+    sample = np.array([[0.1, 1.0], [0.2, 1.2], [0.3, 1.4]])
+    e = StragglerProfile(kind="empirical", shift=0.0, rate=1.0,
+                         sample=sample)
+    assert e.p_finish_by(0.35) == 0.5                 # pooled: 3 of 6
+    assert e.p_finish_by(0.35, shard=0) == 1.0        # fast column
+    assert e.p_finish_by(0.35, shard=1) == 0.0        # slow column
+    assert abs(e.p_finish_by(1.3, elapsed=0.25, shard=1) - 2 / 3) < 1e-12
+    # outlived every observation ever seen: treat as hung
+    assert e.p_finish_by(5.0, elapsed=2.0) == 0.0
+
+
+# -------------------------------------------------------------- speculation
+
+def test_layer_value_tracks_resolution_ladder():
+    from repro.design import layer_value
+    eps = default_spec("eps_matdot", K, N).build()     # F = 4 < R = 7
+    F, R = eps.first_threshold, eps.recovery_threshold
+    assert (F, R) == (4, 7)
+    for m in range(F):                 # reaching the first estimate: full
+        assert layer_value(eps, m) == 1.0
+    assert layer_value(eps, R - 1) == 1.0              # completing exactness
+    assert abs(layer_value(eps, 5) - 2 / 3) < 1e-12    # mid-ladder fraction
+    for m in range(R, N + 1):          # already exact: worthless
+        assert layer_value(eps, m) == 0.0
+    # one-shot code (F == R): every pre-R completion is a full boundary
+    md = default_spec("matdot", K, N).build()
+    assert all(layer_value(md, m) == 1.0
+               for m in range(md.recovery_threshold))
+    assert layer_value(md, md.recovery_threshold) == 0.0
+
+
+def test_speculation_policy_trigger_rules():
+    from repro.design import SpeculationPolicy
+    code = default_spec("eps_matdot", K, N).build()
+    pol = SpeculationPolicy(threshold=0.5)
+    R = code.recovery_threshold
+    prof = StragglerProfile(kind="shifted_exp", shift=1.0, rate=2.0)
+    # decode already exact -> the shard is worthless, never hedge
+    assert not pol.should_speculate(code=code, m_done=R, elapsed=9.0,
+                                    deadline=10.0, done_times=[0.1] * R,
+                                    n_pending=5, profile=prof)
+    # profile rule: hopeless by the deadline -> hedge; plenty of time -> no
+    assert pol.should_speculate(code=code, m_done=6, elapsed=3.0,
+                                deadline=3.1, done_times=[], n_pending=1,
+                                profile=prof)
+    assert not pol.should_speculate(code=code, m_done=6, elapsed=3.0,
+                                    deadline=30.0, done_times=[],
+                                    n_pending=1, profile=prof)
+    # the threshold scales with layer value: the same marginal probability
+    # hedges a boundary-completing shard but not a low-value mid-ladder one
+    d = 3.0 - np.log(0.3) / 2.0        # P(finish by d | alive at 3) = 0.7
+    pol_t = SpeculationPolicy(threshold=0.9)
+    assert pol_t.should_speculate(code=code, m_done=6, elapsed=3.0,
+                                  deadline=d, done_times=[], n_pending=1,
+                                  profile=prof)           # 0.7 < 0.9 * 1.0
+    assert not pol_t.should_speculate(code=code, m_done=5, elapsed=3.0,
+                                      deadline=d, done_times=[],
+                                      n_pending=1,
+                                      profile=prof)       # 0.7 >= 0.9 * 2/3
+    # cold start (no profile): Spark-style rule
+    assert pol.should_speculate(code=code, m_done=6, elapsed=1.0,
+                                deadline=2.0, done_times=[0.1] * 6,
+                                n_pending=1)
+    assert not pol.should_speculate(code=code, m_done=6, elapsed=0.12,
+                                    deadline=2.0, done_times=[0.1] * 6,
+                                    n_pending=1)          # not lagging yet
+    assert not pol.should_speculate(code=code, m_done=2, elapsed=1.0,
+                                    deadline=2.0, done_times=[0.1] * 2,
+                                    n_pending=10)         # too few copies in
+    assert not pol.should_speculate(code=code, m_done=0, elapsed=1.0,
+                                    deadline=2.0, done_times=[],
+                                    n_pending=12)         # nothing observed
+
+
 # ------------------------------------------------------------------- pareto
 
 def test_pareto_frontier_dominance_on_toy():

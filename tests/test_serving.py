@@ -349,6 +349,39 @@ def test_serve_cli_validation():
         assert code.K == k
 
 
+def test_serve_cli_groups_and_upfront_validation():
+    """The redesigned CLI: flags live in argument groups, every illegal
+    combination is reported at once (each message naming its flag), and
+    the effective config prints as one parseable JSON line."""
+    import json
+
+    from repro.launch.serve import (_collect_problems, _effective_config,
+                                    build_parser)
+    ap = build_parser()
+    groups = {g.title for g in ap._action_groups}
+    assert {"fleet", "chaos", "autotune", "speculation"} <= groups
+    # a coherent cluster + speculation config raises nothing
+    ok = ap.parse_args(["--backend", "cluster", "--speculate",
+                        "--replicate", "2", "--chaos", "crash:1"])
+    assert _collect_problems(ok) == []
+    cfg = json.loads(_effective_config(ok, (1.0, 2.0)))
+    assert cfg["backend"] == "cluster" and cfg["speculate"] is True
+    assert cfg["replicate"] == 2 and cfg["deadlines"] == [1.0, 2.0]
+    # five independent mistakes -> five messages, all in one pass
+    bad = ap.parse_args(["--speculate", "--replicate", "2",
+                         "--chaos", "crash:1", "--drift", "ks",
+                         "--batch-size", "0"])
+    problems = _collect_problems(bad)
+    assert len(problems) == 5
+    for flag in ("--speculate", "--replicate", "--chaos", "--drift",
+                 "--batch-size"):
+        assert any(flag in msg for msg in problems), flag
+    # hedging knobs are rejected without --speculate, with the fix named
+    loose = _collect_problems(ap.parse_args(["--hedge-threshold", "0.9",
+                                             "--max-speculations", "2"]))
+    assert all("--speculate" in msg for msg in loose) and len(loose) == 2
+
+
 def test_make_decoder_kinds():
     code = MatDotCode(3, 8, chebyshev_roots(8))
     assert isinstance(make_decoder("incremental", code), IncrementalDecoder)
@@ -359,6 +392,35 @@ def test_make_decoder_kinds():
         make_decoder("magic", code)
 
 
+def test_decoder_push_is_idempotent_per_worker():
+    """A duplicate completion — a first-wins loser's late result leaking
+    past the dispatch accounting — must be ignored by both decoders: a
+    second push of the same worker leaves the estimate bit-unchanged and
+    is counted as ``dup_ignored``, never a second rank-1/decode update."""
+    code = LayerSACCode(2, 8, base="ortho", eps=6.25e-3)
+    rng = np.random.default_rng(6)
+    A = rng.standard_normal((8, 16))
+    B = rng.standard_normal((16, 8))
+    P = code.run_workers(A, B)
+    for kind in ("incremental", "recompute"):
+        dec = make_decoder(kind, code)
+        for n in range(code.first_threshold):
+            dec.push(n, P[n])
+        before = dec.estimate().copy()
+        dec.push(0, P[0])                          # duplicate, mid-stream
+        assert dec.stats["dup_ignored"] == 1
+        assert dec.m == code.first_threshold       # nothing was ingested
+        np.testing.assert_array_equal(dec.estimate(), before)
+        # the remaining distinct workers still fit and decode exactly
+        for n in range(code.first_threshold, code.N):
+            dec.push(n, P[n])
+        dec.push(1, P[1])                          # duplicate at full house
+        assert dec.stats["dup_ignored"] == 2
+        assert dec.m == code.N
+        est = dec.estimate()
+        assert np.linalg.norm(est - A @ B) / np.linalg.norm(A @ B) < 1e-10
+
+
 # ------------------------------------------------------------- device backend
 
 def test_device_backend_matches_simulated_real():
@@ -367,8 +429,8 @@ def test_device_backend_matches_simulated_real():
     rng = np.random.default_rng(3)
     As = [rng.standard_normal((16, 32)) for _ in range(2)]
     Bs = [rng.standard_normal((32, 8)) for _ in range(2)]
-    want = SimulatedBackend().batch_products(code, As, Bs)
-    got = DeviceBackend(use_pallas=False).batch_products(code, As, Bs)
+    want = SimulatedBackend().compute_products(code, As, Bs)
+    got = DeviceBackend(use_pallas=False).compute_products(code, As, Bs)
     assert got.shape == want.shape == (2, 8, 16, 8)
     rel = np.linalg.norm(got - want) / np.linalg.norm(want)
     assert rel < 1e-4                           # f32 device path
@@ -379,8 +441,8 @@ def test_device_backend_complex_reim_expansion():
     code = MatDotCode(3, 8, x_complex(8, 0.5))
     rng = np.random.default_rng(4)
     As, Bs = [rng.standard_normal((8, 24))], [rng.standard_normal((24, 8))]
-    want = SimulatedBackend().batch_products(code, As, Bs)
-    got = DeviceBackend(use_pallas=False).batch_products(code, As, Bs)
+    want = SimulatedBackend().compute_products(code, As, Bs)
+    got = DeviceBackend(use_pallas=False).compute_products(code, As, Bs)
     assert np.iscomplexobj(got)
     rel = np.linalg.norm(got - want) / np.linalg.norm(want)
     assert rel < 1e-4
