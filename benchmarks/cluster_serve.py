@@ -32,11 +32,19 @@ robustness by pinning a second copy of every shard up front at ~2× worker
 cost.  The acceptance gate (asserted in quick mode too) is **speculation ≥
 1.5× faster to target than no-speculation** under both chaos modes.
 
-``tta_gain`` is deliberately *not* named ``speedup``: it is a wall-clock
-ratio whose denominator is pure scheduling overhead, far noisier across
-runners than the ±50% ratio class of ``benchmarks/compare.py`` — the gate
-lives here, the baseline row exists so a silently dropped benchmark still
-fails the regression gate.
+Third scenario — **transport overhead**: the same light-chaos workload
+served twice on identical pools, once over the local pipes/shm transport
+and once over framed TCP sockets.  The ``socket_over_local`` TTA ratio is
+the per-batch price of the wire (operand pickling + one broadcast frame per
+worker vs zero-copy shared memory); the in-module gate asserts it stays
+under ``TRANSPORT_GATE`` — a socket layer that multiplies time-to-accuracy
+is a transport bug, not a deployment cost.
+
+``tta_gain`` (and ``socket_over_local``) are deliberately *not* named
+``speedup``: they are wall-clock ratios whose denominators are pure
+scheduling overhead, far noisier across runners than the ±50% ratio class
+of ``benchmarks/compare.py`` — the gates live here, the baseline rows exist
+so a silently dropped benchmark still fails the regression gate.
 """
 from __future__ import annotations
 
@@ -164,6 +172,54 @@ def _speculation_scenario():
     return gains
 
 
+# ---- transport overhead scenario -----------------------------------------
+TRANSPORT_CHAOS = "sleep:0.005:0.02"     # light jitter only: the wire cost
+#                                          must not hide behind slow hosts
+TRANSPORT_GATE = 2.5                     # socket TTA may cost at most 2.5x
+
+
+def _serve_transport_arm(transport: str, seed: int) -> float:
+    """Mean TTA of the workload on a fresh pool over ``transport``."""
+    code = MatDotCode(K, N_PINNED, x_complex(N_PINNED, 0.1))
+    backend = ClusterBackend(workers=N_PINNED, chaos=TRANSPORT_CHAOS,
+                             seed=seed, transport=transport)
+    try:
+        backend.pool.lease(N_PINNED)
+        cfg = ServeConfig(deadlines=(DEADLINE,), batch_size=2, seed=seed)
+        sched = AsyncMasterScheduler(code, backend, cfg)
+        rng = np.random.default_rng(seed)
+        for _ in range(REQUESTS):
+            sched.submit(rng.standard_normal((ROWS, INNER)),
+                         rng.standard_normal((INNER, ROWS)))
+        results = sched.run()
+        ttas = [res.t_exact for res in results]
+        assert all(t is not None for t in ttas), (
+            f"a request never reached exact recovery on the {transport} "
+            f"transport (lost shards: {sched.losses})")
+        return float(np.mean(ttas))
+    finally:
+        backend.close()
+
+
+def _transport_scenario() -> float:
+    (tta_local, us_local) = timed(_serve_transport_arm, "local", 13,
+                                  repeats=1)
+    (tta_socket, us_socket) = timed(_serve_transport_arm, "socket", 13,
+                                    repeats=1)
+    ratio = tta_socket / max(tta_local, 1e-9)
+    save_rows("cluster_serve_transport.csv", "config,tta_seconds",
+              [("local", f"{tta_local:.4f}"),
+               ("socket", f"{tta_socket:.4f}")])
+    emit("cluster_serve/transport_overhead", us_local + us_socket,
+         f"socket_over_local={ratio:.2f}x;tta_local={tta_local:.3f};"
+         f"tta_socket={tta_socket:.3f}")
+    assert ratio <= TRANSPORT_GATE, (
+        f"socket transport costs {ratio:.2f}x the local TTA at equal "
+        f"chaos (local {tta_local:.3f}s vs socket {tta_socket:.3f}s) — "
+        f"gate is {TRANSPORT_GATE}x")
+    return ratio
+
+
 def main():
     # both arms start from N_PINNED workers; the elastic arm's dispatch
     # leases N_ELASTIC and the pool acquires the extras — real scale-out
@@ -193,7 +249,8 @@ def main():
         f"{tta_pinned:.3f}s) — gate is {TTA_GATE}x")
 
     spec_gains = _speculation_scenario()
-    return gain, spec_gains
+    transport_ratio = _transport_scenario()
+    return gain, spec_gains, transport_ratio
 
 
 if __name__ == "__main__":

@@ -9,9 +9,14 @@ measured on the master as each product arrives, not drawn from a model.
 
 :meth:`ClusterBackend.dispatch_batch` returns a :class:`ClusterDispatch`
 whose :meth:`~ClusterDispatch.next_event` stream feeds the unified serving
-loop: decoders update as shards arrive, answers emit mid-batch.  The legacy
-two-call :meth:`batch_products` / ``sample_latencies`` protocol survives as
-a deprecated blocking shim over the same dispatch.
+loop: decoders update as shards arrive, answers emit mid-batch.  The
+dispatch is wired against the runtime's two seams: operands are published
+through the pool's :class:`~repro.cluster.transport.Transport` (shared
+memory locally, broadcast frames over TCP) and task messages carry an
+opaque operand reference the worker's endpoint resolves; which
+:class:`~repro.cluster.worker.ShardComputer` produces the products is the
+pool's ``compute`` recipe.  Every combination of
+``{numpy, device} × {local, socket}`` serves the same features.
 
 **Speculative execution** (``speculate=True``): the dispatch can re-send a
 still-pending shard to a backup worker leased *outside* the active fleet
@@ -31,27 +36,18 @@ from __future__ import annotations
 
 import queue as queue_mod
 import time
-import warnings
-from multiprocessing import shared_memory
 
 import numpy as np
 
-from ..serving.backends import (ExecutionBackend, SimulatedBackend,
-                                _TWO_CALL_DEPRECATION)
+from ..serving.backends import ExecutionBackend, SimulatedBackend
+from .config import global_config
 from .events import BatchRecord, ShardEvent, TraceRecording
 from .pool import WorkerPool
+from .worker import COMPUTE_NAMES, ComputeSpec, make_computer
 
 __all__ = ["ClusterBackend", "ClusterDispatch", "ReplayBackend"]
 
 _POLL = 0.02          # result-queue wait chunk: bounds reap/abandon latency
-
-
-def _to_shm(arr: np.ndarray) -> tuple[shared_memory.SharedMemory, tuple]:
-    """Copy ``arr`` into a fresh shared-memory block; returns (block, meta)."""
-    arr = np.ascontiguousarray(arr)
-    shm = shared_memory.SharedMemory(create=True, size=arr.nbytes)
-    np.ndarray(arr.shape, dtype=arr.dtype, buffer=shm.buf)[:] = arr
-    return shm, (shm.name, arr.shape, arr.dtype.str)
 
 
 class ClusterDispatch:
@@ -76,8 +72,7 @@ class ClusterDispatch:
             for wid in self.pool.stale_workers(self.batch_id):
                 self.pool.retire(wid, "stale")
         self.workers = self.pool.lease(self.n_shards)
-        self._shm_a, self._a_meta = _to_shm(E_A)
-        self._shm_b, self._b_meta = _to_shm(E_B)
+        self._operands = self.pool.transport.publish(E_A, E_B)
         self._out_shape = (E_A.shape[0], E_A.shape[2], E_B.shape[3])
         self._out_dtype = np.result_type(E_A.dtype, E_B.dtype)
         self.pending: dict[int, int] = {}         # shard -> primary worker id
@@ -98,6 +93,7 @@ class ClusterDispatch:
             # mid-batch lease_backup finds a warm ready spare
             self.pool.prewarm(max(self.pool.target_spares,
                                   (backend.replicate - 1) * self.n_shards))
+        backend._live_dispatches.add(self)
         self._t0 = time.monotonic()
         for shard in range(self.n_shards):
             wid = self.workers[shard]
@@ -106,7 +102,7 @@ class ClusterDispatch:
             self.attempts[shard] = 1
             if not self.pool.send(
                     wid, ("task", self.batch_id, shard,
-                          self._a_meta, self._b_meta)):
+                          self._operands.ref), operands=self._operands):
                 self._mark_lost(shard, "dispatch")
         if backend.replicate > 1:
             for shard in range(self.n_shards):
@@ -155,7 +151,8 @@ class ClusterDispatch:
         if wid is None:
             return False
         if not self.pool.send(wid, ("task", self.batch_id, shard,
-                                    self._a_meta, self._b_meta)):
+                                    self._operands.ref),
+                              operands=self._operands):
             self.pool.release_backup(wid)
             return False
         self._backup_wids.append(wid)
@@ -182,7 +179,8 @@ class ClusterDispatch:
         """Crashed primary: re-send the shard to its slot's replacement."""
         new_wid = self.pool.active[shard]
         if not self.pool.send(new_wid, ("task", self.batch_id, shard,
-                                        self._a_meta, self._b_meta)):
+                                        self._operands.ref),
+                              operands=self._operands):
             return False
         self.pending[shard] = new_wid
         self.copies.setdefault(shard, set()).add(new_wid)
@@ -306,15 +304,14 @@ class ClusterDispatch:
         return out
 
     def finalize(self) -> BatchRecord:
-        """Release the batch's shared memory and record its completion trace."""
+        """Release the batch's published operands; record its completion trace."""
         if self._finalized:
             return self.record()
         self._finalized = True
+        self.backend._live_dispatches.discard(self)
         for wid in self._backup_wids:
             self.pool.release_backup(wid)
-        for shm in (self._shm_a, self._shm_b):
-            shm.close()
-            shm.unlink()
+        self._operands.release()
         rec = self.record()
         if self.backend.recording is not None:
             self.backend.recording.append(rec)
@@ -328,8 +325,8 @@ class ClusterBackend(ExecutionBackend):
     ``chaos`` the injected perturbation spec (see
     :class:`~repro.cluster.worker.ChaosSpec`).  ``grace`` bounds how long a
     live dispatch waits for stragglers past its last deadline before
-    abandoning them (the hang bound); ``sync_timeout`` bounds the blocking
-    :meth:`batch_products` path.  ``record=True`` keeps a
+    abandoning them (the hang bound); ``sync_timeout`` bounds blocking
+    :meth:`ClusterDispatch.drain` callers.  ``record=True`` keeps a
     :class:`~repro.cluster.events.TraceRecording` of every batch for replay.
 
     ``speculate=True`` arms the speculative surface: crashed primaries'
@@ -338,6 +335,11 @@ class ClusterBackend(ExecutionBackend):
     :meth:`ClusterDispatch.speculate` mid-batch.  ``replicate=r`` instead
     pins ``r-1`` up-front copies of every shard — the classic replication
     baseline, no policy in the loop.
+
+    ``compute`` (``"numpy"`` | ``"device"``) and ``transport`` (``"local"``
+    | ``"socket"``; ``hosts`` overrides the socket listener addresses)
+    select the pool's two seams — any of the four combinations serves the
+    full feature set.
     """
 
     name = "cluster"
@@ -346,15 +348,17 @@ class ClusterBackend(ExecutionBackend):
                  chaos=None, seed: int = 0, record: bool = False,
                  grace: float = 2.0, sync_timeout: float = 60.0,
                  speculate: bool = False, replicate: int = 1,
-                 max_requeue: int = 3,
-                 start_method: str = "spawn", pool: WorkerPool | None = None):
+                 max_requeue: int = 3, compute=None, transport=None,
+                 hosts=None, start_method: str = "spawn",
+                 pool: WorkerPool | None = None):
         if grace <= 0 or sync_timeout <= 0:
             raise ValueError("grace and sync_timeout must be > 0")
         if replicate < 1:
             raise ValueError(f"replicate must be >= 1; got {replicate}")
         self.pool = pool if pool is not None else WorkerPool(
             workers, spares=spares, chaos=chaos, seed=seed,
-            start_method=start_method)
+            start_method=start_method, compute=compute, transport=transport,
+            hosts=hosts)
         self._owns_pool = pool is None
         self.grace = float(grace)
         self.sync_timeout = float(sync_timeout)
@@ -364,7 +368,7 @@ class ClusterBackend(ExecutionBackend):
         self.recording: TraceRecording | None = \
             TraceRecording() if record else None
         self._batch_counter = 0
-        self._last_times: np.ndarray | None = None
+        self._live_dispatches: set[ClusterDispatch] = set()
 
     def _next_batch_id(self) -> int:
         self._batch_counter += 1
@@ -384,42 +388,12 @@ class ClusterBackend(ExecutionBackend):
         E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
         return ClusterDispatch(self, E_A, E_B)
 
-    # --------------------------------------------- deprecated two-call seam
-    def batch_products(self, code, As, Bs,
-                       n_shards: int | None = None) -> np.ndarray:
-        """Deprecated blocking shim: drain every shard, return the stack.
-
-        The measured completion times are kept for the paired
-        :meth:`sample_latencies` call, preserving the legacy two-call
-        backend protocol for external callers.
-        """
-        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
-                      stacklevel=2)
-        d = self.dispatch_batch(code, As, Bs, n_shards)
-        d.drain(self.sync_timeout)
-        self._last_times = d.latency_row()
-        out = d.product_stack()
-        d.finalize()
-        return out
-
-    def sample_latencies(self, rng: np.random.Generator,
-                         N: int) -> np.ndarray:
-        """Deprecated: observed times of the last batch (``rng`` unused).
-
-        Real completions are measured, not drawn — the seam the simulated
-        backends documented.  Lost shards report ``inf``: they never arrive.
-        """
-        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
-                      stacklevel=2)
-        if self._last_times is None or len(self._last_times) != N:
-            raise ValueError(
-                "no measured latencies for this fleet size; "
-                "batch_products must run first (the cluster backend "
-                "measures times, it cannot sample them)")
-        return self._last_times
-
     # -------------------------------------------------------------- teardown
     def close(self) -> None:
+        # finalize anything a crashed/raising caller left in flight: the
+        # published operands (shm segments!) must not outlive the backend
+        for d in list(self._live_dispatches):
+            d.finalize()
         if self._owns_pool:
             self.pool.shutdown()
 
@@ -439,14 +413,47 @@ class ReplayBackend(SimulatedBackend):
     batch.  Serving a replay therefore reproduces a cluster run exactly,
     which is both the equivalence fixture and a debugging tool (re-serve a
     production trace under a different decoder/cache configuration).
+
+    ``compute`` mirrors the recorded run's compute seam: ``"numpy"``
+    (default) uses the simulated full-batch einsum — bit-identical to
+    :class:`~repro.cluster.worker.NumpyShardComputer`'s width-1 slices —
+    while ``"device"`` recomputes every per-shard product through the *same*
+    :class:`~repro.cluster.worker.DeviceShardComputer` path the workers
+    ran, so device-mode traces replay bit-identically too.
     """
 
     name = "replay"
 
-    def __init__(self, recording: TraceRecording, **sim_kw):
+    def __init__(self, recording: TraceRecording, compute: str = "numpy",
+                 **sim_kw):
         super().__init__(**sim_kw)
+        if compute not in COMPUTE_NAMES:
+            raise ValueError(f"unknown compute kind {compute!r}; valid: "
+                             f"{', '.join(COMPUTE_NAMES)}")
         self.recording = recording
+        self.compute = compute
+        self._computers: dict[int, object] = {}
         self._cursor = 0
+
+    def _computer_for(self, shard: int):
+        """One device computer per logical device index, mirroring the
+        pool's ``wid % host_device_count`` pinning (worker ``wid`` == shard
+        slot on the first lease)."""
+        count = max(1, global_config.host_device_count)
+        index = int(shard) % count
+        if index not in self._computers:
+            self._computers[index] = make_computer(
+                ComputeSpec.parse("device").for_worker(index))
+        return self._computers[index]
+
+    def compute_products(self, code, As, Bs,
+                         n_shards: int | None = None) -> np.ndarray:
+        if self.compute == "numpy":
+            return super().compute_products(code, As, Bs, n_shards)
+        E_A, E_B = self._encode_batch(code, As, Bs, n_shards)
+        cols = [self._computer_for(shard).shard_products(E_A, E_B, shard)
+                for shard in range(E_A.shape[1])]
+        return np.stack(cols, axis=1)
 
     def draw_latencies(self, rng: np.random.Generator,
                        N: int) -> np.ndarray:

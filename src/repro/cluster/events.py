@@ -71,7 +71,7 @@ class BatchRecord:
     def latency_row(self) -> np.ndarray:
         """Per-shard completion times; lost shards never complete (``inf``).
 
-        This is exactly the row a ``sample_latencies`` replay hands the
+        This is exactly the row a ``draw_latencies`` replay hands the
         event loop: ``merged_event_stream`` sorts the finite times into the
         measured arrival order (times are strictly increasing at the
         recorder) and pushes the ``inf`` entries past every deadline.

@@ -16,7 +16,7 @@ growing past it needed somewhere for the extra workers to come from.
 * :meth:`reap` — liveness sweep: dead processes (crashed workers) are
   detected, their in-flight shards reported lost, and replacements spawned
   so the fleet heals to its leased size.
-* :meth:`heartbeat` — active ping over the task pipes (a stuck-but-alive
+* :meth:`heartbeat` — active ping over the task channels (a stuck-but-alive
   worker answers ``is_alive()`` yet never a ping); safe between batches.
 * :meth:`lease_backup` / :meth:`release_backup` / :meth:`cancel` /
   :meth:`prewarm` — the speculative-execution surface: backups are leased
@@ -26,8 +26,13 @@ growing past it needed somewhere for the extra workers to come from.
   ``shards_cancelled`` counts first-wins losers separately from
   ``shards_lost`` (shards that genuinely never arrived).
 
-Workers are daemon processes: a wedged master can die without leaving
-orphans, and CI jobs cannot be held hostage by a hung worker.
+The pool is wired against the runtime's two seams: the **transport**
+(:mod:`~repro.cluster.transport` — ``"local"`` pipes/shm or ``"socket"``
+TCP; every message, operand block and result crosses it) and the
+**compute** recipe (:class:`~repro.cluster.worker.ComputeSpec` — numpy or
+device shard products; the pool stamps each worker's logical device index
+at spawn).  Workers are daemon processes: a wedged master can die without
+leaving orphans, and CI jobs cannot be held hostage by a hung worker.
 """
 from __future__ import annotations
 
@@ -36,7 +41,8 @@ import queue as queue_mod
 import time
 from dataclasses import dataclass, field
 
-from .worker import ChaosSpec, worker_main
+from .transport import OperandHandle, Transport, make_transport
+from .worker import ChaosSpec, ComputeSpec, worker_main
 
 __all__ = ["WorkerPool", "WorkerHandle"]
 
@@ -49,24 +55,21 @@ class WorkerHandle:
 
     wid: int
     proc: object
-    conn: object                          # master end of the task pipe
+    conn: object                          # master-side transport channel
     busy: set = field(default_factory=set)   # in-flight (batch_id, shard)
     ready: bool = False                   # startup handshake received
 
     def alive(self) -> bool:
-        return self.proc.is_alive()
+        # a closed/truncated channel is as dead as a crashed process: its
+        # in-flight shards can never arrive, so reap must see it
+        return self.proc.is_alive() and not self.conn.dead
 
     def poll_ready(self, timeout: float = 0.0) -> bool:
         """Consume the worker's startup handshake if it has arrived."""
         if self.ready:
             return True
-        try:
-            if self.conn.poll(timeout):
-                msg = self.conn.recv()
-                if msg[0] == "ready":
-                    self.ready = True
-        except (EOFError, OSError):
-            pass                          # died during startup; reap handles
+        if self.conn.poll_ready(timeout):
+            self.ready = True
         return self.ready
 
 
@@ -79,11 +82,21 @@ class WorkerPool:
     perturbation plans are assigned by worker id at spawn, so runs are
     reproducible.  ``start_method`` defaults to ``"spawn"`` (fork is unsafe
     once jax threads exist in the master).
+
+    ``transport`` selects the wire (``"local"`` | ``"socket"`` | a ready
+    :class:`~repro.cluster.transport.Transport`; ``hosts`` overrides the
+    socket listener addresses) and ``compute`` the workers' shard computer
+    (``"numpy"`` | ``"device"`` | a
+    :class:`~repro.cluster.worker.ComputeSpec`); both default from
+    :data:`~repro.cluster.config.global_config`.
     """
 
     def __init__(self, workers: int = 0, *, spares: int = 0,
                  chaos: ChaosSpec | str | None = None, seed: int = 0,
-                 start_method: str = "spawn", ready_timeout: float = 60.0):
+                 start_method: str = "spawn", ready_timeout: float = 60.0,
+                 transport: Transport | str | None = None,
+                 compute: ComputeSpec | str | None = None,
+                 hosts=None):
         if workers < 0 or spares < 0:
             raise ValueError(f"need workers >= 0 and spares >= 0; got "
                              f"{workers}, {spares}")
@@ -93,7 +106,9 @@ class WorkerPool:
         self.seed = int(seed)
         self.target_spares = int(spares)
         self._ctx = mp.get_context(start_method)
-        self.results = self._ctx.Queue()
+        self.transport = make_transport(transport, ctx=self._ctx,
+                                        hosts=hosts)
+        self.compute = ComputeSpec.parse(compute)
         self._active: dict[int, WorkerHandle] = {}
         self._spares: list[WorkerHandle] = []
         self._backups: dict[int, WorkerHandle] = {}   # speculative leases
@@ -110,6 +125,11 @@ class WorkerPool:
             self.acquire(workers)
 
     # ---------------------------------------------------------------- sizing
+    @property
+    def results(self):
+        """The transport's unified result stream (done/pong messages)."""
+        return self.transport.results
+
     @property
     def active(self) -> list[int]:
         """Leased worker ids in lease order (shard n runs on ``active[n]``)."""
@@ -136,16 +156,17 @@ class WorkerPool:
     def _spawn(self) -> WorkerHandle:
         wid = self._next_id
         self._next_id += 1
-        parent_conn, child_conn = self._ctx.Pipe()
+        channel, endpoint_arg = self.transport.connect(wid)
         proc = self._ctx.Process(
             target=worker_main,
-            args=(wid, child_conn, self.results,
-                  self.chaos.plan_for(wid), self.seed),
+            args=(wid, endpoint_arg, self.chaos.plan_for(wid), self.seed,
+                  self.compute.for_worker(wid)),
             daemon=True, name=f"sac-worker-{wid}")
         proc.start()
-        child_conn.close()
+        if endpoint_arg[0] == "local":
+            endpoint_arg[1].close()       # child's pipe end, now inherited
         self.stats["spawned"] += 1
-        return WorkerHandle(wid=wid, proc=proc, conn=parent_conn)
+        return WorkerHandle(wid=wid, proc=proc, conn=channel)
 
     def acquire(self, n: int) -> list[int]:
         """Lease ``n`` more workers into the active fleet; returns their ids.
@@ -340,10 +361,7 @@ class WorkerPool:
         idle = [h for h in self._active.values() if not h.busy and h.alive()]
         t0 = time.monotonic()
         for h in idle:
-            try:
-                h.conn.send(("ping", token))
-            except (BrokenPipeError, OSError):
-                pass
+            h.conn.send(("ping", token))
         out: dict[int, float] = {}
         deadline = t0 + timeout
         while len(out) < len(idle):
@@ -359,14 +377,18 @@ class WorkerPool:
         return out
 
     # ------------------------------------------------------------- transport
-    def send(self, wid: int, msg) -> bool:
-        """Deliver one task message; ``False`` when the pipe is already dead."""
+    def send(self, wid: int, msg,
+             operands: OperandHandle | None = None) -> bool:
+        """Deliver one task message; ``False`` when the channel is dead.
+
+        ``operands`` is the batch's published operand handle — the channel
+        decides what crossing the wire means (nothing for shared memory,
+        a one-time broadcast frame per worker for the socket transport).
+        """
         h = self._handle(wid)
         if h is None:
             return False
-        try:
-            h.conn.send(msg)
-        except (BrokenPipeError, OSError):
+        if not h.conn.send(msg, operands):
             return False
         if msg[0] == "task":
             h.busy.add((msg[1], msg[2]))
@@ -477,19 +499,13 @@ class WorkerPool:
 
     # -------------------------------------------------------------- shutdown
     def _scrap(self, h: WorkerHandle, join: bool = False) -> bool:
-        try:
-            h.conn.close()
-        except OSError:
-            pass
+        h.conn.close()
         if join:
             h.proc.join(_JOIN_TIMEOUT)
         return False          # so reap's filter-expression can call it
 
     def _shutdown_handle(self, h: WorkerHandle) -> None:
-        try:
-            h.conn.send(("shutdown",))
-        except (BrokenPipeError, OSError):
-            pass
+        h.conn.send(("shutdown",))
         h.proc.join(_JOIN_TIMEOUT)
         if h.proc.is_alive():
             h.proc.kill()
@@ -507,8 +523,7 @@ class WorkerPool:
         self._active.clear()
         self._backups.clear()
         self._spares.clear()
-        self.results.cancel_join_thread()
-        self.results.close()
+        self.transport.close()
 
     def _check_open(self) -> None:
         if self._closed:

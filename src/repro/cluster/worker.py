@@ -1,12 +1,13 @@
-"""Worker processes: shared-memory shard compute + injectable chaos.
+"""Worker processes: pluggable shard compute + injectable chaos.
 
 A worker is one OS process in a :class:`~repro.cluster.pool.WorkerPool`.
-It blocks on its task pipe, and for every ``("task", ...)`` message attaches
-the batch's shared-memory operand blocks, computes its encode shard's
-product stack for the whole request batch, and puts the result on the
-pool's shared result queue.  The perturbation layer runs *before* the
-compute, so injected chaos shapes the completion-time process the master
-observes — reproducible straggler/crash/hang scenarios on a real fleet:
+It blocks on its transport endpoint, and for every ``("task", ...)``
+message resolves the batch's operand reference, computes its encode
+shard's product stack for the whole request batch through its
+:class:`ShardComputer`, and sends the result up the transport's shared
+result stream.  The perturbation layer runs *before* the compute, so
+injected chaos shapes the completion-time process the master observes —
+reproducible straggler/crash/hang scenarios on a real fleet:
 
 * ``sleep:LO:HI``   — per-task uniform jitter in ``[LO, HI]`` seconds (every
   worker; the baseline latency spread).
@@ -23,20 +24,44 @@ Designation is deterministic: the first ``crash`` worker ids crash, the next
 fresh ids past the doomed ranges, so a replaced crasher serves correctly —
 exactly the recovery story the chaos tests pin.
 
-This module is the spawn target, so it keeps its imports to numpy + stdlib:
-child startup must not pay for jax.
+**The compute seam** — :class:`ShardComputer` has two implementations:
+
+* :class:`NumpyShardComputer` — the host einsum (a width-1 slice of the
+  simulated backend's full-batch contraction, so record/replay through
+  ``SimulatedBackend`` stays bit-identical).
+* :class:`DeviceShardComputer` — the same shard product routed through the
+  ``kernels/coded_matmul`` ops (Pallas on TPU, jnp elsewhere) on the
+  worker's own logical device: worker ``wid`` pins itself to
+  ``jax.devices()[wid % host_device_count]``, with CPU CI exposing the
+  virtual devices via ``xla_force_host_platform_device_count``.  Complex
+  evaluation points take the paper's 4×-real-GEMM expansion — the device
+  never sees complex dtypes.  Float32 device products match the numpy path
+  to the per-code-family tolerances pinned in ``tests/test_cluster.py``
+  and recorded in ``EXPERIMENTS.md``.
+
+This module is the spawn target, so its import-time dependencies stay
+numpy + stdlib: jax is imported lazily inside ``DeviceShardComputer``, and
+the warm-up happens *before* the ready handshake — ``pool.lease`` blocks
+on readiness, so the dispatch clock never pays for jax startup.
 """
 from __future__ import annotations
 
 import os
+import sys
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
-__all__ = ["ChaosSpec", "WorkerPlan", "worker_main"]
+from .config import global_config
+
+__all__ = ["ChaosSpec", "WorkerPlan", "ShardComputer", "NumpyShardComputer",
+           "DeviceShardComputer", "ComputeSpec", "COMPUTE_NAMES",
+           "make_computer", "worker_main"]
 
 _HANG_SECONDS = 1e6
+
+COMPUTE_NAMES = ("numpy", "device")
 
 
 @dataclass(frozen=True)
@@ -118,99 +143,237 @@ class WorkerPlan:
     slow_delay: float = 0.0
 
 
-def _attach_shm(name: str):
-    """Attach an existing shared-memory block without tracker registration.
+# ------------------------------------------------------------ compute seam
+@dataclass(frozen=True)
+class ComputeSpec:
+    """Picklable recipe for a worker's :class:`ShardComputer`.
 
-    On CPython < 3.13 every attach registers the segment with the process's
-    resource tracker, which then tries to unlink it at exit — double-free
-    noise (and, worst case, destruction of a segment the master still owns:
-    bpo-38119).  The master created the segment and owns its lifecycle; the
-    worker only reads it, so the attach is untracked.
+    The pool stamps ``device_index`` per worker (``wid % host_device_count``
+    — one logical device per worker); every other field defaults from
+    :data:`~repro.cluster.config.global_config`.
     """
-    from multiprocessing import resource_tracker, shared_memory
-    orig = resource_tracker.register
 
-    def _skip_shm(rname, rtype):
-        if rtype != "shared_memory":
-            orig(rname, rtype)
+    kind: str = "numpy"
+    device_index: int = 0
+    host_device_count: int = 8
+    use_pallas: bool | None = None
+    dtype: str = "float32"
 
-    resource_tracker.register = _skip_shm
-    try:
-        return shared_memory.SharedMemory(name=name)
-    finally:
-        resource_tracker.register = orig
+    @staticmethod
+    def parse(spec: "ComputeSpec | str | None") -> "ComputeSpec":
+        """Normalize ``None`` / ``"numpy"`` / ``"device"`` / a ready spec."""
+        if isinstance(spec, ComputeSpec):
+            return spec
+        cfg = global_config
+        kind = cfg.compute if spec is None else str(spec)
+        if kind not in COMPUTE_NAMES:
+            raise ValueError(f"unknown compute kind {kind!r}; valid: "
+                             f"{', '.join(COMPUTE_NAMES)}")
+        return ComputeSpec(kind=kind,
+                           host_device_count=cfg.host_device_count,
+                           use_pallas=cfg.use_pallas,
+                           dtype=cfg.device_dtype)
+
+    def for_worker(self, wid: int) -> "ComputeSpec":
+        """This spec pinned to worker ``wid``'s logical device."""
+        if self.kind != "device" or self.host_device_count <= 0:
+            return self
+        return replace(self,
+                       device_index=int(wid) % self.host_device_count)
 
 
-def _shard_products(task) -> np.ndarray:
-    """The shard's ``(B, Nx, Ny)`` product stack from shared-memory operands.
+class ShardComputer:
+    """The compute seam: one shard's product stack for a request batch.
 
-    The einsum is the *same contraction on the same memory layout* as the
+    ``shard_products(E_A, E_B, shard)`` takes the full encoded operand
+    stacks ``(B, n, Nx, bz)`` / ``(B, n, bz, Ny)`` and returns the
+    ``(B, Nx, Ny)`` product stack of encode shard ``shard`` — contiguous,
+    safe to ship (never a view into shared memory).
+    """
+
+    name = "abstract"
+
+    def shard_products(self, E_A: np.ndarray, E_B: np.ndarray,
+                       shard: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def warmup(self) -> None:
+        """Pay one-time startup cost (device: jax init) before serving."""
+
+
+class NumpyShardComputer(ShardComputer):
+    """Host numpy: the *same contraction on the same memory layout* as the
     simulated backend's full-batch ``"rnij,rnjl->rnil"`` (a width-1 slice of
     the worker axis), so a recorded cluster run replayed through
     ``SimulatedBackend`` reproduces bit-identical products — the
-    record/replay equivalence ``tests/test_cluster.py`` pins.
-    """
-    (_, _, shard, (a_name, a_shape, a_dtype),
-     (b_name, b_shape, b_dtype)) = task
-    shm_a = _attach_shm(a_name)
-    shm_b = _attach_shm(b_name)
-    try:
-        E_A = np.ndarray(a_shape, dtype=np.dtype(a_dtype), buffer=shm_a.buf)
-        E_B = np.ndarray(b_shape, dtype=np.dtype(b_dtype), buffer=shm_b.buf)
+    record/replay equivalence ``tests/test_cluster.py`` pins."""
+
+    name = "numpy"
+
+    def shard_products(self, E_A, E_B, shard):
         n = int(shard)
         P = np.einsum("rnij,rnjl->rnil",
                       E_A[:, n:n + 1], E_B[:, n:n + 1])[:, 0]
         return np.ascontiguousarray(P)
-    finally:
-        shm_a.close()
-        shm_b.close()
 
 
-def worker_main(worker_id: int, conn, result_q, plan: WorkerPlan,
-                seed: int) -> None:
+def _ensure_virtual_devices(count: int) -> None:
+    """Expose ``count`` virtual CPU devices before jax first imports.
+
+    No-op when jax is already imported (the flag would be ignored — use
+    whatever topology the process was configured with, as CI does) or when
+    an ``xla_force_host_platform_device_count`` is already set.
+    """
+    if count <= 0 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={int(count)}"
+        ).strip()
+
+
+class DeviceShardComputer(ShardComputer):
+    """Shard products on the worker's own logical device via the kernel ops.
+
+    The shard slice folds the batch axis into the kernel's worker dim
+    (``(B, Nx, bz) @ (B, bz, Ny)``), exactly the ``DeviceBackend`` layout.
+    Complex evaluation points expand into 4 real GEMMs
+    (``worker_products_complex``); the result is cast back to a host array
+    in the compute dtype (float32 by default — the pinning tolerance's
+    source).
+    """
+
+    name = "device"
+
+    def __init__(self, device_index: int = 0,
+                 host_device_count: int | None = None,
+                 use_pallas: bool | None = None, dtype: str = "float32"):
+        count = global_config.host_device_count \
+            if host_device_count is None else int(host_device_count)
+        _ensure_virtual_devices(count)
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels.coded_matmul.ops import (worker_products,
+                                                worker_products_complex)
+        self._jax = jax
+        self._jnp = jnp
+        self._products = worker_products
+        self._products_complex = worker_products_complex
+        devices = jax.devices()
+        self.device = devices[int(device_index) % len(devices)]
+        self.use_pallas = use_pallas
+        self.dtype = jnp.dtype(dtype)
+
+    def shard_products(self, E_A, E_B, shard):
+        jnp = self._jnp
+        n = int(shard)
+        ea = np.ascontiguousarray(E_A[:, n])      # (B, Nx, bz)
+        eb = np.ascontiguousarray(E_B[:, n])      # (B, bz, Ny)
+        with self._jax.default_device(self.device):
+            if np.iscomplexobj(ea) or np.iscomplexobj(eb):
+                re, im = self._products_complex(
+                    jnp.asarray(ea.real, self.dtype),
+                    jnp.asarray(ea.imag, self.dtype),
+                    jnp.asarray(eb.real, self.dtype),
+                    jnp.asarray(eb.imag, self.dtype),
+                    use_pallas=self.use_pallas)
+                P = np.asarray(re) + 1j * np.asarray(im)
+            else:
+                P = np.asarray(self._products(jnp.asarray(ea, self.dtype),
+                                              jnp.asarray(eb, self.dtype),
+                                              use_pallas=self.use_pallas))
+        return np.ascontiguousarray(P)
+
+    def warmup(self) -> None:
+        one = np.ones((1, 1, 1, 1))
+        self.shard_products(one, one, 0)
+
+
+def make_computer(spec: ComputeSpec | str | None) -> ShardComputer:
+    """Build the :class:`ShardComputer` a :class:`ComputeSpec` describes."""
+    spec = ComputeSpec.parse(spec)
+    if spec.kind == "numpy":
+        return NumpyShardComputer()
+    return DeviceShardComputer(device_index=spec.device_index,
+                               host_device_count=spec.host_device_count,
+                               use_pallas=spec.use_pallas, dtype=spec.dtype)
+
+
+# ------------------------------------------------------------- entry point
+def worker_main(worker_id: int, endpoint_arg, plan: WorkerPlan,
+                seed: int, compute: ComputeSpec | None = None) -> None:
     """Worker process entry point: serve tasks until ``("shutdown",)``.
 
-    Messages on ``conn``:
+    ``endpoint_arg`` is the transport's picklable spawn argument
+    (:func:`~repro.cluster.transport.make_worker_endpoint` rebuilds the
+    endpoint in-child).  Messages on the endpoint:
 
-    * ``("task", batch_id, shard, a_meta, b_meta)`` — compute the shard
-      product stack, reply ``("done", worker_id, batch_id, shard, P)`` on
-      the result queue (chaos permitting).
+    * ``("task", batch_id, shard, operand_ref)`` — resolve the operands,
+      compute the shard product stack, reply
+      ``("done", worker_id, batch_id, shard, P)`` (chaos permitting).
     * ``("ping", token)`` — reply ``("pong", worker_id, token, t)``
       (heartbeat liveness).
     * ``("shutdown",)`` — exit cleanly.
 
     The jitter rng is seeded on ``(seed, worker_id)`` so a chaos run is
-    reproducible per worker identity.
+    reproducible per worker identity.  The ``finally`` closes the endpoint
+    — tracked shm attachments are released on *every* Python-level exit
+    path (EOF, compute exception, shutdown), not just a clean loop exit.
     """
+    from .transport import TransportClosed, make_worker_endpoint
     rng = np.random.default_rng([int(seed), int(worker_id), 0xC1A0])
     try:
-        conn.send(("ready", int(worker_id)))     # startup handshake: the
-    except (BrokenPipeError, OSError):           # pool's lease() blocks on
-        return                                   # this before dispatching
-    first_task = True
-    while True:
-        try:
-            msg = conn.recv()
-        except (EOFError, OSError):
-            return                       # master went away
-        kind = msg[0]
-        if kind == "shutdown":
+        endpoint = make_worker_endpoint(endpoint_arg)
+    except TransportClosed:
+        return                                   # master already gone
+    try:
+        computer = make_computer(compute)
+        computer.warmup()                        # jax init before the ready
+        try:                                     # handshake: lease() blocks
+            endpoint.send(("ready", int(worker_id)))  # on this, so dispatch
+        except TransportClosed:                  # never pays for startup
             return
-        if kind == "ping":
-            result_q.put(("pong", int(worker_id), msg[1], time.monotonic()))
-            continue
-        if kind != "task":
-            continue                     # unknown message: ignore, stay up
-        if first_task:
-            first_task = False
-            if plan.crash:
-                os._exit(13)             # hard death: no cleanup, no reply
-            if plan.hang:
-                time.sleep(_HANG_SECONDS)
-        delay = plan.slow_delay
-        if plan.sleep is not None:
-            delay += float(rng.uniform(plan.sleep[0], plan.sleep[1]))
-        if delay > 0:
-            time.sleep(delay)
-        P = _shard_products(msg)
-        result_q.put(("done", int(worker_id), int(msg[1]), int(msg[2]), P))
+        first_task = True
+        while True:
+            try:
+                msg = endpoint.recv()
+            except TransportClosed:
+                return                           # master went away
+            kind = msg[0]
+            if kind == "shutdown":
+                return
+            if kind == "ping":
+                try:
+                    endpoint.send(("pong", int(worker_id), msg[1],
+                                   time.monotonic()))
+                except TransportClosed:
+                    return
+                continue
+            if kind != "task":
+                continue                         # unknown message: stay up
+            if first_task:
+                first_task = False
+                if plan.crash:
+                    os._exit(13)                 # hard death: no cleanup
+                if plan.hang:
+                    time.sleep(_HANG_SECONDS)
+            delay = plan.slow_delay
+            if plan.sleep is not None:
+                delay += float(rng.uniform(plan.sleep[0], plan.sleep[1]))
+            if delay > 0:
+                time.sleep(delay)
+            _, batch_id, shard, ref = msg
+            try:
+                E_A, E_B = endpoint.get_operands(ref)
+                P = computer.shard_products(E_A, E_B, int(shard))
+            finally:
+                endpoint.release_operands()
+            try:
+                endpoint.send(("done", int(worker_id), int(batch_id),
+                               int(shard), P))
+            except TransportClosed:
+                return
+    finally:
+        endpoint.close()

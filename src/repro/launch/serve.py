@@ -49,10 +49,16 @@ scale-out path), ``--spares`` keeps warm spares after releases, ``--chaos``
 injects reproducible perturbations (``sleep:LO:HI``, ``slow:C:DELAY``,
 ``crash:C``, ``hang:C``), ``--record PATH`` saves the measured completion
 trace, and ``--replay PATH`` re-serves a recorded trace through the
-simulated product path (bit-identical decode outputs).  With ``--autotune
---scale-out``, a drift-detected tail worsening lets the policy *grow* the
-fleet (``--N-options`` entries above ``--N`` are allowed on the cluster
-backend)::
+simulated product path (bit-identical decode outputs).  ``--compute
+{numpy,device}`` picks the shard-product implementation each worker runs
+(numpy einsum, or the Pallas kernel ops on the worker's pinned XLA
+device); ``--transport {local,socket}`` picks the master<->worker plumbing
+(pipes + shared memory, or framed TCP with ``--hosts`` listener
+addresses).  Every feature works in all four compute x transport combos,
+and a device-mode trace replays with ``--replay PATH --compute device``.
+With ``--autotune --scale-out``, a drift-detected tail worsening lets the
+policy *grow* the fleet (``--N-options`` entries above ``--N`` are allowed
+on the cluster backend)::
 
     PYTHONPATH=src python -m repro.launch.serve --backend cluster \
         --code matdot --K 2 --N 4 --workers 4 --spares 1 \
@@ -223,6 +229,19 @@ def build_parser() -> argparse.ArgumentParser:
     fleet.add_argument("--fleet", type=int, default=None,
                        help="dispatch only the first N encode shards of the "
                        "starting code (operator override)")
+    fleet.add_argument("--compute", default="numpy",
+                       choices=("numpy", "device"),
+                       help="cluster/replay: shard products via numpy einsum "
+                       "or the Pallas kernel ops on each worker's pinned "
+                       "device")
+    fleet.add_argument("--transport", default="local",
+                       choices=("local", "socket"),
+                       help="cluster: master<->worker plumbing — pipes + "
+                       "shared memory, or length-prefixed frames over TCP")
+    fleet.add_argument("--hosts", default=None,
+                       help="cluster --transport socket: comma-separated "
+                       "listener addresses (default 127.0.0.1,127.0.0.1 — "
+                       "two localhost 'hosts')")
 
     chaos = ap.add_argument_group(
         "chaos", "fault injection and trace record/replay")
@@ -306,9 +325,21 @@ def _collect_problems(args) -> list[str]:
     problems.extend(validate_args(args.code, args.K, args.N))
     for flag, name in ((args.chaos is not None, "--chaos"),
                        (args.record is not None, "--record"),
-                       (args.spares != 0, "--spares")):
+                       (args.spares != 0, "--spares"),
+                       (args.transport != "local", "--transport socket"),
+                       (args.hosts is not None, "--hosts")):
         if flag and args.backend != "cluster":
             problems.append(f"{name} requires --backend cluster")
+    if args.hosts is not None and args.transport != "socket":
+        problems.append("--hosts requires --transport socket (the local "
+                        "transport has no listener addresses)")
+    # device compute runs on the cluster's worker processes, or during
+    # replay (ReplayBackend recomputes each shard through the same kernel
+    # path) — the modeled backends have their own product story
+    if (args.compute != "numpy" and args.backend != "cluster"
+            and args.replay is None):
+        problems.append("--compute device requires --backend cluster or "
+                        "--replay PATH (re-serving a device-mode trace)")
     if args.replay is not None and args.backend != "sim":
         problems.append(f"--replay re-serves the trace through the "
                         f"simulated product path; drop --backend "
@@ -379,7 +410,10 @@ def _effective_config(args, deadlines) -> str:
            "replicate": args.replicate}
     if args.backend == "cluster":
         cfg.update(workers=args.workers, spares=args.spares,
-                   chaos=args.chaos, grace=args.grace)
+                   chaos=args.chaos, grace=args.grace,
+                   compute=args.compute, transport=args.transport)
+    if args.replay is not None:
+        cfg.update(compute=args.compute)
     if args.speculate:
         cfg.update(hedge_threshold=args.hedge_threshold,
                    max_speculations=args.max_speculations,
@@ -406,15 +440,19 @@ def main(argv=None):
             recording = TraceRecording.load(args.replay)
         except (OSError, ValueError, KeyError) as e:
             raise SystemExit(f"[serve] --replay {args.replay}: {e}")
-        backend = make_backend("replay", recording=recording)
+        backend = make_backend("replay", recording=recording,
+                               compute=args.compute)
     elif args.backend == "cluster":
+        hosts = (tuple(h.strip() for h in args.hosts.split(","))
+                 if args.hosts is not None else None)
         try:
             backend = make_backend(
                 "cluster", workers=args.workers, spares=args.spares,
                 chaos=args.chaos, seed=args.seed,
                 record=args.record is not None, grace=args.grace,
                 speculate=args.speculate, replicate=args.replicate,
-                max_requeue=args.max_requeue)
+                max_requeue=args.max_requeue, compute=args.compute,
+                transport=args.transport, hosts=hosts)
         except ValueError as e:
             raise SystemExit(f"[serve] invalid arguments:\n  {e}")
     else:
@@ -485,7 +523,8 @@ def main(argv=None):
     extra = ""
     if args.backend == "cluster":
         extra = (f" workers={args.workers} spares={args.spares} "
-                 f"chaos={args.chaos or 'none'} (deadlines are wall-clock "
+                 f"chaos={args.chaos or 'none'} compute={args.compute} "
+                 f"transport={args.transport} (deadlines are wall-clock "
                  "seconds)")
     print(f"[serve] code={args.code} K={args.K} N={args.N} "
           f"R={code.recovery_threshold} first={code.first_threshold} "

@@ -25,14 +25,11 @@ simulation, device, cluster, and replay identically:
   the simulated product path, bit-identically.
 
 The legacy two-call ``batch_products`` / ``sample_latencies`` protocol is
-kept only as a deprecated shim for external callers (it warns and delegates
-to the :meth:`~ExecutionBackend.compute_products` /
-:meth:`~ExecutionBackend.draw_latencies` hooks the synthetic adapter is
-built from); nothing inside the repo drives it anymore.
+gone: modeled backends expose the :meth:`~ExecutionBackend.compute_products`
+/ :meth:`~ExecutionBackend.draw_latencies` hooks the synthetic adapter is
+built from, and everything else speaks ``dispatch_batch``.
 """
 from __future__ import annotations
-
-import warnings
 
 import numpy as np
 
@@ -44,12 +41,6 @@ from ..core.straggler import (sample_times, shifted_exp_times,
 
 __all__ = ["ExecutionBackend", "SyntheticDispatch", "SimulatedBackend",
            "DeviceBackend", "make_backend", "BACKEND_NAMES"]
-
-_TWO_CALL_DEPRECATION = (
-    "the two-call batch_products/sample_latencies backend protocol is "
-    "deprecated; use dispatch_batch(code, As, Bs, n_shards=..., rng=...) "
-    "and walk the returned event stream (or call the compute_products/"
-    "draw_latencies hooks directly)")
 
 
 class SyntheticDispatch:
@@ -148,21 +139,6 @@ class ExecutionBackend:
                        N: int) -> np.ndarray:
         """Per-worker completion times for one dispatched batch."""
         raise NotImplementedError
-
-    # ------------------------------------------- deprecated two-call protocol
-    def batch_products(self, code: CDCCode, As, Bs,
-                       n_shards: int | None = None) -> np.ndarray:
-        """Deprecated shim over :meth:`compute_products`."""
-        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
-                      stacklevel=2)
-        return self.compute_products(code, As, Bs, n_shards)
-
-    def sample_latencies(self, rng: np.random.Generator,
-                         N: int) -> np.ndarray:
-        """Deprecated shim over :meth:`draw_latencies`."""
-        warnings.warn(_TWO_CALL_DEPRECATION, DeprecationWarning,
-                      stacklevel=2)
-        return self.draw_latencies(rng, N)
 
     # shared host-side encode: one einsum over the stacked request blocks
     @staticmethod

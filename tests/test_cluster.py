@@ -122,20 +122,18 @@ def test_pool_heartbeat_and_replacement_after_crash():
 # ------------------------------------------------------- products equivalence
 
 def test_cluster_products_bit_match_simulated():
-    """The sync backend path: worker products == host einsum, bitwise.
-
-    This is the one sanctioned call site of the deprecated two-call
-    ``batch_products``/``sample_latencies`` protocol: both shims must emit
-    ``DeprecationWarning`` and still delegate to the unified event-stream
-    dispatch, bit-identically."""
+    """Worker products == host einsum, bitwise, through the unified
+    event-stream dispatch (the only execution surface since the two-call
+    protocol was removed)."""
     rng = np.random.default_rng(0)
     code = MatDotCode(K, N, x_complex(N, 0.1))
     As, Bs = zip(*_reqs(rng, 3))
     with ClusterBackend(workers=N, seed=0) as be:
-        with pytest.warns(DeprecationWarning, match="two-call"):
-            got = be.batch_products(code, As, Bs)
-        with pytest.warns(DeprecationWarning, match="two-call"):
-            times = be.sample_latencies(rng, N)
+        d = be.dispatch_batch(code, As, Bs)
+        d.drain(30.0)
+        got = d.product_stack()
+        times = d.latency_row()
+        d.finalize()
     want = SimulatedBackend().compute_products(code, As, Bs)
     assert got.dtype == want.dtype
     np.testing.assert_array_equal(got, want)
@@ -143,20 +141,14 @@ def test_cluster_products_bit_match_simulated():
     assert np.all(np.diff(np.sort(times)) > 0)    # strictly increasing
 
 
-def test_simulated_two_call_shim_warns_and_delegates():
-    """The base-class shims: same outputs as the unified hooks, plus the
-    deprecation signal external callers migrate on."""
-    rng = np.random.default_rng(0)
-    code = MatDotCode(K, N, x_complex(N, 0.1))
-    As, Bs = zip(*_reqs(rng, 2))
-    be = SimulatedBackend()
-    with pytest.warns(DeprecationWarning, match="dispatch_batch"):
-        got = be.batch_products(code, As, Bs)
-    np.testing.assert_array_equal(got, be.compute_products(code, As, Bs))
-    with pytest.warns(DeprecationWarning, match="dispatch_batch"):
-        t_shim = be.sample_latencies(np.random.default_rng(3), N)
-    t_hook = be.draw_latencies(np.random.default_rng(3), N)
-    np.testing.assert_array_equal(t_shim, t_hook)
+def test_two_call_protocol_is_gone():
+    """The deprecated ``batch_products``/``sample_latencies`` shims were
+    deleted outright: ``dispatch_batch`` is the one execution surface, and
+    nothing resurrects the old names on the base class or its children."""
+    from repro.serving.backends import ExecutionBackend
+    for cls in (ExecutionBackend, SimulatedBackend, ClusterBackend):
+        assert not hasattr(cls, "batch_products")
+        assert not hasattr(cls, "sample_latencies")
 
 
 # ------------------------------------------------------ record/replay pinning
@@ -452,6 +444,110 @@ def test_replicate_pins_upfront_copies():
     (ttfa, t_exact, answers), *_ = out
     assert t_exact is not None and answers[-1][3]
     assert time.monotonic() - t0 < 60.0
+
+
+# ------------------------------------------- compute seam: device vs numpy
+
+DEVICE_FAMILIES = [
+    ("matdot_complex", lambda: MatDotCode(2, 6, x_complex(6, 0.1)), 1e-5),
+    ("gsac_complex",
+     lambda: GroupSACCode(2, 6, x_complex(6, 0.1), [1, 1]), 1e-5),
+    ("lsac_ortho_real",
+     lambda: LayerSACCode(2, 6, base="ortho", eps=6.25e-3), 1e-5),
+]
+
+
+@pytest.mark.parametrize("family,make_code,tol", DEVICE_FAMILIES,
+                         ids=[t[0] for t in DEVICE_FAMILIES])
+def test_device_computer_matches_numpy_per_code_family(family, make_code,
+                                                       tol):
+    """The compute seam's accuracy contract, pinned per code family: every
+    shard's device product (float32 kernel ops; complex operands via the
+    4-real-GEMM expansion, so the device never sees a complex dtype) stays
+    within relative tolerance of the numpy einsum."""
+    from repro.cluster import ComputeSpec, make_computer
+    from repro.serving.backends import ExecutionBackend
+    code = make_code()
+    rng = np.random.default_rng(23)
+    As, Bs = zip(*_reqs(rng, 2))
+    E_A, E_B = ExecutionBackend._encode_batch(code, As, Bs)
+    base = make_computer(ComputeSpec.parse("numpy"))
+    for shard in range(code.N):
+        want = base.shard_products(E_A, E_B, shard)
+        dev = make_computer(ComputeSpec.parse("device").for_worker(shard))
+        got = dev.shard_products(E_A, E_B, shard)
+        assert got.shape == want.shape
+        rel = np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-30)
+        assert rel < tol, (family, shard, rel)
+
+
+# --------------------------------------------- transport seam: serve parity
+
+def test_socket_transport_crash_loss_and_replay_bit_identity():
+    """numpy x socket: the TCP transport serves the same crash semantics as
+    the pipes (worker 0's EOF surfaces as a clean shard loss, the pool
+    heals by replacement) and its measured trace replays bit-identically."""
+    t0 = time.monotonic()
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(3)
+    reqs = _reqs(rng, 4)
+    cfg = ServeConfig(deadlines=(1.0,), stream=True, batch_size=2, seed=0)
+    with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
+                        seed=2, grace=3.0, record=True,
+                        transport="socket") as be:
+        sched = AsyncMasterScheduler(code, be, cfg)
+        live = _serve(sched, reqs)
+        rec = be.recording
+        stats = be.pool.stats
+    assert [(b, s, why) for b, s, why in sched.losses] == [(0, 0, "crash")]
+    assert stats["replaced"] == 1 and stats["crashed"] == 1
+    replay = _serve(MasterScheduler(code, ReplayBackend(rec), cfg), reqs)
+    assert live == replay
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_device_compute_serve_and_replay_bit_identity():
+    """device x socket — both seams stretched at once: Pallas kernel-op
+    products on each worker's pinned device, shipped over TCP.  The live
+    answers replay bit-identically only through a device-mode
+    ``ReplayBackend``; the numpy replay differs in the float32 low bits,
+    proving the recorded trace pins the compute seam too."""
+    t0 = time.monotonic()
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(31)
+    reqs = _reqs(rng, 2)
+    cfg = ServeConfig(deadlines=(1.0,), stream=True, batch_size=2, seed=0)
+    with ClusterBackend(workers=N, chaos="sleep:0.005:0.02", seed=8,
+                        record=True, compute="device",
+                        transport="socket") as be:
+        live = _serve(AsyncMasterScheduler(code, be, cfg), reqs)
+        rec = be.recording
+    dev = _serve(MasterScheduler(code, ReplayBackend(rec, compute="device"),
+                                 cfg), reqs)
+    assert live == dev
+    host = _serve(MasterScheduler(code, ReplayBackend(rec), cfg), reqs)
+    assert live != host
+    assert time.monotonic() - t0 < 120.0
+
+
+def test_transport_releases_operands_on_crash_and_teardown():
+    """Published operand blocks never outlive their dispatch: the worker
+    endpoint closes its shm attachments on every exit path (even a crash
+    mid-task), every finalized dispatch releases its publication, and the
+    transport holds zero live publications through close()."""
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(29)
+    cfg = ServeConfig(deadlines=(1.0,), batch_size=2, seed=0)
+    be = ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
+                        seed=2, grace=3.0)
+    try:
+        sched = AsyncMasterScheduler(code, be, cfg)
+        _serve(sched, _reqs(rng, 4))
+        assert sched.losses                        # the crash really fired
+        assert be.pool.transport.live_operands == 0
+    finally:
+        be.close()
+    assert be.pool.transport.live_operands == 0
 
 
 # ---------------------------------------------- async/sim surface equivalence
