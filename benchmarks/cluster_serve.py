@@ -40,6 +40,16 @@ worker vs zero-copy shared memory); the in-module gate asserts it stays
 under ``TRANSPORT_GATE`` — a socket layer that multiplies time-to-accuracy
 is a transport bug, not a deployment cost.
 
+Fourth scenario — **observability overhead**: the same workload under a
+*fixed* 0.25 s per-task delay served twice, once bare and once with the
+full ``repro.obs`` wiring live (MetricsRegistry through pool / transport /
+backend / master plus a per-shard Tracer).  The fixed delay makes the TTA
+floor deterministic, so ``obs_over_plain`` isolates the recording cost;
+the in-module gate asserts it stays under ``OBS_GATE`` (1.05×) — the
+instruments are supposed to be counter bumps and timestamp appends, never
+a serving tax.  The instrumented arm's counter snapshot rides the JSON
+row's ``metrics`` sub-dict (see ``benchmarks/common.emit``).
+
 ``tta_gain`` (and ``socket_over_local``) are deliberately *not* named
 ``speedup``: they are wall-clock ratios whose denominators are pure
 scheduling overhead, far noisier across runners than the ±50% ratio class
@@ -220,6 +230,81 @@ def _transport_scenario() -> float:
     return ratio
 
 
+# ---- observability overhead scenario -------------------------------------
+OBS_CHAOS = "sleep:0.25:0.25"    # deterministic fixed delay: the TTA floor
+#                                  dwarfs instrumentation cost (µs per
+#                                  event), so the ratio isolates recording
+#                                  overhead instead of scheduler jitter
+OBS_GATE = 1.05                  # instrumented TTA may cost at most 1.05x
+OBS_REPEATS = 2                  # min-of-2 per arm absorbs dispatch jitter
+
+
+def _serve_obs_arm(seed: int, *, instrument: bool):
+    """Mean TTA with the full obs wiring on or off.
+
+    The instrumented arm threads a live :class:`MetricsRegistry` through
+    pool, transport, backend, cache-free master path *and* runs a
+    :class:`Tracer` — the exact configuration ``--metrics-out`` +
+    ``--trace-out`` enables.  Returns ``(mean tta, counters | None)``.
+    """
+    from repro.obs import MetricsRegistry, Tracer
+    code = MatDotCode(K, N_PINNED, x_complex(N_PINNED, 0.1))
+    registry = MetricsRegistry() if instrument else None
+    tracer = Tracer() if instrument else None
+    backend = ClusterBackend(workers=N_PINNED, chaos=OBS_CHAOS, seed=seed,
+                             metrics=registry)
+    try:
+        backend.pool.lease(N_PINNED)
+        cfg = ServeConfig(deadlines=(DEADLINE,), batch_size=2, seed=seed)
+        sched = MasterScheduler(code, backend, cfg, metrics=registry,
+                                tracer=tracer)
+        rng = np.random.default_rng(seed)
+        for _ in range(REQUESTS):
+            sched.submit(rng.standard_normal((ROWS, INNER)),
+                         rng.standard_normal((INNER, ROWS)))
+        results = sched.run()
+        ttas = [res.t_exact for res in results]
+        assert all(t is not None for t in ttas), (
+            "a request never reached exact recovery in the observability "
+            f"arm (instrument={instrument}, lost shards: {sched.losses})")
+        snap = registry.snapshot()["counters"] if instrument else None
+        return float(np.mean(ttas)), snap
+    finally:
+        backend.close()
+
+
+def _obs_scenario() -> float:
+    tta = {}
+    snap = None
+    us_total = 0.0
+    for label, instrument in (("plain", False), ("instrumented", True)):
+        best = float("inf")
+        for _ in range(OBS_REPEATS):
+            (res, us) = timed(_serve_obs_arm, 13, repeats=1,
+                              instrument=instrument)
+            us_total += us
+            t, counters = res
+            best = min(best, t)
+            if counters is not None:
+                snap = counters
+        tta[label] = best
+    ratio = tta["instrumented"] / max(tta["plain"], 1e-9)
+    # the instrumented arm's counter snapshot rides the JSON row: unknown
+    # keys are ignored by the compare gate but visible in the artifact
+    save_rows("cluster_serve_observability.csv", "config,tta_seconds",
+              [(label, f"{t:.4f}") for label, t in tta.items()])
+    emit("cluster_serve/observability_overhead", us_total,
+         f"obs_over_plain={ratio:.3f}x;tta_plain={tta['plain']:.3f};"
+         f"tta_instrumented={tta['instrumented']:.3f}",
+         metrics=snap)
+    assert ratio <= OBS_GATE, (
+        f"full instrumentation costs {ratio:.3f}x the plain TTA "
+        f"(plain {tta['plain']:.3f}s vs instrumented "
+        f"{tta['instrumented']:.3f}s) — gate is {OBS_GATE}x; recording "
+        "must stay off the hot path")
+    return ratio
+
+
 def main():
     # both arms start from N_PINNED workers; the elastic arm's dispatch
     # leases N_ELASTIC and the pool acquires the extras — real scale-out
@@ -250,7 +335,8 @@ def main():
 
     spec_gains = _speculation_scenario()
     transport_ratio = _transport_scenario()
-    return gain, spec_gains, transport_ratio
+    obs_ratio = _obs_scenario()
+    return gain, spec_gains, transport_ratio, obs_ratio
 
 
 if __name__ == "__main__":

@@ -42,11 +42,21 @@ def paper_problem(rng: np.random.Generator):
     return rng.standard_normal((100, NZ)), rng.standard_normal((NZ, 100))
 
 
-def emit(name: str, us_per_call: float, derived) -> None:
-    """The required CSV row: ``name,us_per_call,derived``."""
+def emit(name: str, us_per_call: float, derived, metrics=None) -> None:
+    """The required CSV row: ``name,us_per_call,derived``.
+
+    ``metrics`` (optional) attaches a flat name → number sub-dict to the
+    JSON row — typically one section of a
+    :class:`repro.obs.MetricsRegistry` snapshot.  It rides only the JSON
+    artifact (the CSV line is unchanged); ``compare.py`` gates the keys it
+    knows and ignores the rest.
+    """
     print(f"{name},{us_per_call:.3f},{derived}")
-    _ROWS.append({"name": name, "us_per_call": us_per_call,
-                  "derived": str(derived)})
+    row = {"name": name, "us_per_call": us_per_call,
+           "derived": str(derived)}
+    if metrics is not None:
+        row["metrics"] = dict(metrics)
+    _ROWS.append(row)
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

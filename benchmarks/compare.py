@@ -76,6 +76,26 @@ def _parse_metrics(derived: str) -> dict[str, float]:
     return out
 
 
+def _sub_metrics(row: dict) -> dict[str, float]:
+    """Numeric entries of a row's optional ``metrics`` sub-dict.
+
+    Benchmarks may attach a flat name → number map (typically one section of
+    a ``repro.obs.MetricsRegistry`` snapshot) via ``emit(..., metrics=...)``.
+    Unknown keys fall through ``_classify`` ungated; non-numeric values (and
+    a missing / malformed sub-dict) are simply skipped — observability
+    payloads must never be able to break the gate's parse.
+    """
+    sub = row.get("metrics")
+    if not isinstance(sub, dict):
+        return {}
+    out: dict[str, float] = {}
+    for key, value in sub.items():
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            continue
+        out[str(key)] = float(value)
+    return out
+
+
 def _classify(key: str, time_gated: bool) -> tuple[str, str] | None:
     """``(direction, tolerance-class)`` for gated keys, ``None`` otherwise."""
     for prefix in HIGHER_BETTER:
@@ -112,6 +132,8 @@ def compare_rows(base_rows, cur_rows, *, tolerance: float,
             continue
         base_m = _parse_metrics(base.get("derived", ""))
         cur_m = _parse_metrics(cur.get("derived", ""))
+        base_m.update(_sub_metrics(base))
+        cur_m.update(_sub_metrics(cur))
         base_m["us_per_call"] = float(base.get("us_per_call", 0.0))
         cur_m["us_per_call"] = float(cur.get("us_per_call", 0.0))
         for key, base_v in base_m.items():

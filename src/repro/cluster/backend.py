@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from ..obs import NULL_REGISTRY
 from ..serving.backends import ExecutionBackend, SimulatedBackend
 from .config import global_config
 from .events import BatchRecord, ShardEvent, TraceRecording
@@ -66,6 +67,7 @@ class ClusterDispatch:
         self.n_shards = int(E_A.shape[1])
         self.batch_id = backend._next_batch_id()
         self.max_requeue = backend.max_requeue
+        self._m = backend._m                      # backend.* counters
         if backend.speculate_enabled:
             # a worker wedged on a previous batch (hung primary whose shard
             # a backup won) must not be handed a fresh shard
@@ -94,6 +96,8 @@ class ClusterDispatch:
             self.pool.prewarm(max(self.pool.target_spares,
                                   (backend.replicate - 1) * self.n_shards))
         backend._live_dispatches.add(self)
+        self._m["batches_dispatched"].inc()
+        self._m["shards_dispatched"].inc(self.n_shards)
         self._t0 = time.monotonic()
         for shard in range(self.n_shards):
             wid = self.workers[shard]
@@ -159,6 +163,7 @@ class ClusterDispatch:
         self.copies.setdefault(shard, set()).add(wid)
         self.attempts[shard] = self.attempts.get(shard, 1) + 1
         self.n_speculated += 1
+        self._m["speculations"].inc()
         self.redispatches.append((shard, reason))
         self._queued.append(ShardEvent(kind="redispatch", shard=shard,
                                        t=self._stamp(), worker=wid,
@@ -186,6 +191,7 @@ class ClusterDispatch:
         self.copies.setdefault(shard, set()).add(new_wid)
         self.attempts[shard] = self.attempts.get(shard, 1) + 1
         self.pool.requeued(1)
+        self._m["requeues"].inc()
         self.redispatches.append((shard, "crash"))
         self._queued.append(ShardEvent(kind="redispatch", shard=shard,
                                        t=self._stamp(), worker=new_wid,
@@ -258,7 +264,11 @@ class ClusterDispatch:
                 continue
             if msg[0] == "pong":
                 continue
-            _, wid, batch_id, shard, P = msg
+            # workers piggyback a monotonic timing triple as field 6; a
+            # 5-field message (older transports, hand-crafted test frames)
+            # simply has no timings
+            _, wid, batch_id, shard, P = msg[:5]
+            timings = msg[5] if len(msg) > 5 else None
             duplicate = self.pool.mark_done(wid, batch_id, shard)
             if duplicate or batch_id != self.batch_id \
                     or shard not in self.pending:
@@ -270,7 +280,8 @@ class ClusterDispatch:
             self.times[shard] = t
             self.products[shard] = P
             return ShardEvent(kind="done", shard=shard, t=t, worker=wid,
-                              products=P, speculative=wid != primary)
+                              products=P, speculative=wid != primary,
+                              timings=timings)
 
     def drain(self, timeout: float) -> None:
         """Pump events until nothing is pending (bounded by ``timeout``)."""
@@ -350,7 +361,7 @@ class ClusterBackend(ExecutionBackend):
                  speculate: bool = False, replicate: int = 1,
                  max_requeue: int = 3, compute=None, transport=None,
                  hosts=None, start_method: str = "spawn",
-                 pool: WorkerPool | None = None):
+                 pool: WorkerPool | None = None, metrics=None):
         if grace <= 0 or sync_timeout <= 0:
             raise ValueError("grace and sync_timeout must be > 0")
         if replicate < 1:
@@ -358,8 +369,15 @@ class ClusterBackend(ExecutionBackend):
         self.pool = pool if pool is not None else WorkerPool(
             workers, spares=spares, chaos=chaos, seed=seed,
             start_method=start_method, compute=compute, transport=transport,
-            hosts=hosts)
+            hosts=hosts, metrics=metrics)
         self._owns_pool = pool is None
+        # an adopted pool keeps its own registry unless we were handed one
+        self.metrics = metrics if metrics is not None else self.pool.metrics
+        if self.metrics is None:
+            self.metrics = NULL_REGISTRY
+        self._m = {k: self.metrics.counter("backend." + k)
+                   for k in ("batches_dispatched", "shards_dispatched",
+                             "speculations", "requeues")}
         self.grace = float(grace)
         self.sync_timeout = float(sync_timeout)
         self.speculate_enabled = bool(speculate)

@@ -49,6 +49,9 @@ class ShardEvent:
     products: np.ndarray | None = None     # (B, Nx, Ny) for "done"
     reason: str | None = None              # for "lost" / "redispatch"
     speculative: bool = False              # "done": a speculative copy won
+    timings: tuple | None = None           # "done": worker-side monotonic
+    #   deltas (wait, operand_resolve, compute) — additive span metadata,
+    #   never recorded into BatchRecord, so replay stays bit-identical
 
 
 @dataclass

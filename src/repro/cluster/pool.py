@@ -41,6 +41,7 @@ import queue as queue_mod
 import time
 from dataclasses import dataclass, field
 
+from ..obs import NULL_REGISTRY
 from .transport import OperandHandle, Transport, make_transport
 from .worker import ChaosSpec, ComputeSpec, worker_main
 
@@ -96,7 +97,7 @@ class WorkerPool:
                  start_method: str = "spawn", ready_timeout: float = 60.0,
                  transport: Transport | str | None = None,
                  compute: ComputeSpec | str | None = None,
-                 hosts=None):
+                 hosts=None, metrics=None):
         if workers < 0 or spares < 0:
             raise ValueError(f"need workers >= 0 and spares >= 0; got "
                              f"{workers}, {spares}")
@@ -106,8 +107,9 @@ class WorkerPool:
         self.seed = int(seed)
         self.target_spares = int(spares)
         self._ctx = mp.get_context(start_method)
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.transport = make_transport(transport, ctx=self._ctx,
-                                        hosts=hosts)
+                                        hosts=hosts, metrics=self.metrics)
         self.compute = ComputeSpec.parse(compute)
         self._active: dict[int, WorkerHandle] = {}
         self._spares: list[WorkerHandle] = []
@@ -121,8 +123,16 @@ class WorkerPool:
                       "shards_lost": 0, "shards_cancelled": 0,
                       "duplicates_reaped": 0, "backups_leased": 0,
                       "shards_requeued": 0}
+        # registry mirror of the stats dict: every mutation goes through
+        # _bump so ``pool.<key>`` counters and ``stats`` cannot diverge
+        self._mcounters = {k: self.metrics.counter("pool." + k)
+                           for k in self.stats}
         if workers:
             self.acquire(workers)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        self._mcounters[key].inc(n)
 
     # ---------------------------------------------------------------- sizing
     @property
@@ -165,7 +175,7 @@ class WorkerPool:
         proc.start()
         if endpoint_arg[0] == "local":
             endpoint_arg[1].close()       # child's pipe end, now inherited
-        self.stats["spawned"] += 1
+        self._bump("spawned")
         return WorkerHandle(wid=wid, proc=proc, conn=channel)
 
     def acquire(self, n: int) -> list[int]:
@@ -189,7 +199,7 @@ class WorkerPool:
                 h = self._spawn()
             self._active[h.wid] = h
             out.append(h.wid)
-        self.stats["acquired"] += len(out)
+        self._bump("acquired", len(out))
         return out
 
     def release(self, wids) -> None:
@@ -198,7 +208,7 @@ class WorkerPool:
             h = self._active.pop(int(wid), None)
             if h is None:
                 continue
-            self.stats["released"] += 1
+            self._bump("released")
             if h.alive() and len(self._spares) < self.target_spares:
                 self._spares.append(h)
             else:
@@ -267,21 +277,21 @@ class WorkerPool:
             if h.alive():
                 continue
             dead.append((wid, set(h.busy)))
-            self.stats["crashed"] += 1
-            self.stats["shards_lost"] += len(h.busy)
+            self._bump("crashed")
+            self._bump("shards_lost", len(h.busy))
             self._scrap(h)
             self._forget_cancelled(wid)
             if replace:
                 nh = self._spawn()
                 self._replace_slot(wid, nh)
-                self.stats["replaced"] += 1
+                self._bump("replaced")
             else:
                 del self._active[wid]
         for wid, h in list(self._backups.items()):
             if h.alive():
                 continue
             dead.append((wid, set(h.busy)))
-            self.stats["crashed"] += 1
+            self._bump("crashed")
             self._scrap(h)
             self._forget_cancelled(wid)
             del self._backups[wid]
@@ -310,7 +320,7 @@ class WorkerPool:
         wid = int(wid)
         bh = self._backups.pop(wid, None)
         if bh is not None:
-            self.stats["retired"] += 1
+            self._bump("retired")
             bh.proc.kill()
             self._scrap(bh, join=True)
             self._forget_cancelled(wid)
@@ -318,13 +328,13 @@ class WorkerPool:
         h = self._active.get(wid)
         if h is None:
             return
-        self.stats["retired"] += 1
-        self.stats["shards_lost"] += len(h.busy)
+        self._bump("retired")
+        self._bump("shards_lost", len(h.busy))
         h.proc.kill()
         self._scrap(h, join=True)
         self._forget_cancelled(wid)
         self._replace_slot(wid, self._spawn())
-        self.stats["replaced"] += 1
+        self._bump("replaced")
 
     def _forget_cancelled(self, wid: int) -> None:
         """Drop cancellation bookkeeping for a worker that no longer exists."""
@@ -405,7 +415,7 @@ class WorkerPool:
         dup = key in self._cancelled
         if dup:
             self._cancelled.discard(key)
-            self.stats["duplicates_reaped"] += 1
+            self._bump("duplicates_reaped")
         h = self._handle(wid)
         if h is not None:
             h.busy.discard((batch_id, shard))
@@ -425,7 +435,7 @@ class WorkerPool:
             return False
         h.busy.discard((batch_id, shard))
         self._cancelled.add((int(wid), int(batch_id), int(shard)))
-        self.stats["shards_cancelled"] += 1
+        self._bump("shards_cancelled")
         return True
 
     def lease_backup(self) -> int | None:
@@ -454,7 +464,7 @@ class WorkerPool:
             self._scrap(h)
             return None
         self._backups[h.wid] = h
-        self.stats["backups_leased"] += 1
+        self._bump("backups_leased")
         return h.wid
 
     def release_backup(self, wid: int) -> None:
@@ -462,7 +472,7 @@ class WorkerPool:
         h = self._backups.pop(int(wid), None)
         if h is None:
             return
-        self.stats["released"] += 1
+        self._bump("released")
         if h.alive() and len(self._spares) < self.target_spares:
             self._spares.append(h)
         else:
@@ -494,8 +504,8 @@ class WorkerPool:
         worker; when the dispatch re-sends the shard to the replacement
         instead of abandoning it, the loss didn't happen.
         """
-        self.stats["shards_lost"] -= int(n)
-        self.stats["shards_requeued"] += int(n)
+        self._bump("shards_lost", -int(n))
+        self._bump("shards_requeued", int(n))
 
     # -------------------------------------------------------------- shutdown
     def _scrap(self, h: WorkerHandle, join: bool = False) -> bool:

@@ -42,6 +42,7 @@ from multiprocessing import shared_memory
 
 import numpy as np
 
+from ..obs import NULL_REGISTRY
 from .config import global_config
 
 __all__ = [
@@ -104,8 +105,11 @@ def recv_frame(sock: socket.socket, max_bytes: int | None = None) -> bytes:
     return _recv_exact(sock, n, "frame") if n else b""
 
 
-def send_msg(sock: socket.socket, msg) -> None:
-    send_frame(sock, pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL))
+def send_msg(sock: socket.socket, msg) -> int:
+    """Frame + send one pickled message; returns bytes put on the wire."""
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    send_frame(sock, payload)
+    return _HEADER.size + len(payload)
 
 
 def recv_msg(sock: socket.socket):
@@ -175,24 +179,60 @@ class OperandHandle:
         self._release_fn()
 
 
+# ----------------------------------------------------- transport metrics
+class _TransportMetrics:
+    """Pre-resolved transport instruments (one attribute hop per event).
+
+    Resolving ``registry.counter(name)`` per send would cost a dict lookup
+    on the hot path; binding once at pool construction keeps the per-send
+    cost at one ``inc`` call (a no-op instrument when metrics are off).
+    """
+
+    __slots__ = ("msgs", "frames", "bytes", "operands", "cache_hits",
+                 "deaths")
+
+    def __init__(self, registry):
+        self.msgs = registry.counter("transport.msgs_sent")
+        self.frames = registry.counter("transport.frames_sent")
+        self.bytes = registry.counter("transport.bytes_sent")
+        self.operands = registry.counter("transport.operands_published")
+        self.cache_hits = registry.counter("transport.operand_cache_hits")
+        self.deaths = registry.counter("transport.channel_deaths")
+
+
+_NULL_TM = _TransportMetrics(NULL_REGISTRY)
+
+
 # ------------------------------------------------------- master channels
 class LocalChannel:
     """Master end of one worker's duplex pipe."""
 
     kind = "local"
 
-    def __init__(self, conn):
+    def __init__(self, conn, tm: _TransportMetrics = _NULL_TM):
         self.conn = conn
         self.dead = False
         self._ready = False
+        self._closing = False
+        self._tm = tm
+
+    def _mark_dead(self) -> None:
+        # a death after we initiated shutdown is a clean exit, not a loss
+        if not self.dead:
+            self.dead = True
+            if not self._closing:
+                self._tm.deaths.inc()
 
     def send(self, msg, operands: OperandHandle | None = None) -> bool:
         # operands live in shared memory; the ref inside ``msg`` is enough
+        if msg and msg[0] == "shutdown":
+            self._closing = True
         try:
             self.conn.send(msg)
+            self._tm.msgs.inc()
             return True
         except (BrokenPipeError, OSError):
-            self.dead = True
+            self._mark_dead()
             return False
 
     def poll_ready(self, timeout: float = 0.0) -> bool:
@@ -204,10 +244,11 @@ class LocalChannel:
                 if msg[0] == "ready":
                     self._ready = True
         except (EOFError, OSError):
-            self.dead = True
+            self._mark_dead()
         return self._ready
 
     def close(self) -> None:
+        self._closing = True
         try:
             self.conn.close()
         except OSError:
@@ -225,7 +266,8 @@ class SocketChannel:
 
     kind = "socket"
 
-    def __init__(self, wid: int, connect_timeout: float):
+    def __init__(self, wid: int, connect_timeout: float,
+                 tm: _TransportMetrics = _NULL_TM):
         self.wid = int(wid)
         self.sock: socket.socket | None = None
         self.addr: tuple | None = None
@@ -235,6 +277,8 @@ class SocketChannel:
         self._attached = threading.Event()
         self._shipped: set = set()        # operand tokens already on the wire
         self._lock = threading.Lock()     # one writer at a time on the sock
+        self._closing = False
+        self._tm = tm
 
     def attach(self, sock: socket.socket, addr) -> None:
         self.sock = sock
@@ -242,30 +286,48 @@ class SocketChannel:
         self._attached.set()
         self._ready.set()                 # identification IS the handshake
 
+    def _mark_dead(self) -> None:
+        # a death after we initiated shutdown is a clean exit, not a loss
+        if not self.dead:
+            self.dead = True
+            if not self._closing:
+                self._tm.deaths.inc()
+
     def send(self, msg, operands: OperandHandle | None = None) -> bool:
         if self.dead:
             return False
+        if msg and msg[0] == "shutdown":
+            self._closing = True
         if not self._attached.wait(timeout=self._connect_timeout):
-            self.dead = True
+            self._mark_dead()
             return False
+        tm = self._tm
         try:
             with self._lock:
-                if operands is not None \
-                        and operands.token not in self._shipped:
-                    E_A, E_B = operands.payload
-                    send_msg(self.sock,
-                             ("operands", operands.token, E_A, E_B))
-                    self._shipped.add(operands.token)
-                send_msg(self.sock, msg)
+                if operands is not None:
+                    if operands.token not in self._shipped:
+                        E_A, E_B = operands.payload
+                        n = send_msg(self.sock,
+                                     ("operands", operands.token, E_A, E_B))
+                        self._shipped.add(operands.token)
+                        tm.frames.inc()
+                        tm.bytes.inc(n)
+                    else:                 # operands already on this wire
+                        tm.cache_hits.inc()
+                n = send_msg(self.sock, msg)
+            tm.msgs.inc()
+            tm.frames.inc()
+            tm.bytes.inc(n)
             return True
         except (TransportClosed, OSError):
-            self.dead = True
+            self._mark_dead()
             return False
 
     def poll_ready(self, timeout: float = 0.0) -> bool:
         return self._ready.wait(timeout=timeout if timeout > 0 else 0)
 
     def close(self) -> None:
+        self._closing = True
         self.dead = True
         if self.sock is not None:
             try:
@@ -282,6 +344,16 @@ class Transport:
 
     def __init__(self):
         self._published: dict = {}        # token -> live OperandHandle
+        self._tm = _NULL_TM               # rebind via bind_metrics()
+
+    def bind_metrics(self, registry) -> None:
+        """Resolve transport instruments against ``registry`` (idempotent).
+
+        Channels created *after* the bind carry the instruments; the pool
+        binds before it spawns anyone, so in practice that is all of them.
+        """
+        if registry is not None and getattr(registry, "enabled", False):
+            self._tm = _TransportMetrics(registry)
 
     # one unified result stream: ("done", ...) / ("pong", ...) messages;
     # ``get(timeout=...)`` raises ``queue.Empty`` — both backends comply
@@ -302,6 +374,7 @@ class Transport:
 
     def _track(self, handle: OperandHandle) -> OperandHandle:
         self._published[handle.token] = handle
+        self._tm.operands.inc()
         return handle
 
     def _untrack(self, token) -> None:
@@ -324,7 +397,7 @@ class LocalTransport(Transport):
 
     def connect(self, wid: int):
         parent_conn, child_conn = self._ctx.Pipe()
-        return (LocalChannel(parent_conn),
+        return (LocalChannel(parent_conn, self._tm),
                 ("local", child_conn, self.results))
 
     def publish(self, E_A, E_B) -> OperandHandle:
@@ -391,7 +464,7 @@ class SocketTransport(Transport):
 
     def connect(self, wid: int):
         host, port = self.addresses[int(wid) % len(self._listeners)]
-        chan = SocketChannel(wid, self.connect_timeout)
+        chan = SocketChannel(wid, self.connect_timeout, self._tm)
         with self._lock:
             self._pending[int(wid)] = chan
             self._channels.append(chan)
@@ -441,7 +514,7 @@ class SocketTransport(Transport):
             try:
                 msg = recv_msg(chan.sock)
             except TransportClosed:
-                chan.dead = True          # EOF / truncation → lost shards
+                chan._mark_dead()         # EOF / truncation → lost shards
                 return
             self.results.put(msg)
 
@@ -461,19 +534,25 @@ class SocketTransport(Transport):
             chan.close()
 
 
-def make_transport(spec, *, ctx=None, hosts=None) -> Transport:
+def make_transport(spec, *, ctx=None, hosts=None, metrics=None) -> Transport:
     """``"local"`` | ``"socket"`` | a ready :class:`Transport` instance."""
     if isinstance(spec, Transport):
+        if metrics is not None:
+            spec.bind_metrics(metrics)
         return spec
     name = global_config.transport if spec is None else str(spec)
     if name == "local":
         if ctx is None:
             raise ValueError("local transport needs a multiprocessing ctx")
-        return LocalTransport(ctx)
-    if name == "socket":
-        return SocketTransport(hosts=hosts)
-    raise ValueError(f"unknown transport {name!r}; valid transports: "
-                     f"{', '.join(TRANSPORT_NAMES)}")
+        tr = LocalTransport(ctx)
+    elif name == "socket":
+        tr = SocketTransport(hosts=hosts)
+    else:
+        raise ValueError(f"unknown transport {name!r}; valid transports: "
+                         f"{', '.join(TRANSPORT_NAMES)}")
+    if metrics is not None:
+        tr.bind_metrics(metrics)
+    return tr
 
 
 # -------------------------------------------------------- worker endpoints

@@ -312,7 +312,10 @@ def worker_main(worker_id: int, endpoint_arg, plan: WorkerPlan,
 
     * ``("task", batch_id, shard, operand_ref)`` — resolve the operands,
       compute the shard product stack, reply
-      ``("done", worker_id, batch_id, shard, P)`` (chaos permitting).
+      ``("done", worker_id, batch_id, shard, P, timings)`` (chaos
+      permitting).  ``timings`` is the monotonic delta triple
+      ``(wait, operand_resolve, compute)`` measured in-worker; consumers
+      that predate it unpack the first five fields only.
     * ``("ping", token)`` — reply ``("pong", worker_id, token, t)``
       (heartbeat liveness).
     * ``("shutdown",)`` — exit cleanly.
@@ -353,6 +356,7 @@ def worker_main(worker_id: int, endpoint_arg, plan: WorkerPlan,
                 continue
             if kind != "task":
                 continue                         # unknown message: stay up
+            t_recv = time.monotonic()
             if first_task:
                 first_task = False
                 if plan.crash:
@@ -365,14 +369,20 @@ def worker_main(worker_id: int, endpoint_arg, plan: WorkerPlan,
             if delay > 0:
                 time.sleep(delay)
             _, batch_id, shard, ref = msg
+            t_op = time.monotonic()              # wait = chaos + queueing
             try:
                 E_A, E_B = endpoint.get_operands(ref)
+                t_cmp = time.monotonic()
                 P = computer.shard_products(E_A, E_B, int(shard))
             finally:
                 endpoint.release_operands()
+            t_done = time.monotonic()
+            # monotonic deltas only — the master anchors the span on its
+            # own clock, so socket workers need no clock sync
+            timings = (t_op - t_recv, t_cmp - t_op, t_done - t_cmp)
             try:
                 endpoint.send(("done", int(worker_id), int(batch_id),
-                               int(shard), P))
+                               int(shard), P, timings))
             except TransportClosed:
                 return
     finally:

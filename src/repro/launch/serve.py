@@ -307,6 +307,21 @@ def build_parser() -> argparse.ArgumentParser:
     spec.add_argument("--max-requeue", type=int, default=3,
                       help="dispatch attempts per shard before a crashed "
                       "chain is declared lost (--speculate)")
+
+    obs = ap.add_argument_group(
+        "observability", "metrics registry, per-shard trace export, and "
+        "the crash flight recorder")
+    obs.add_argument("--metrics-out", default=None, metavar="PATH",
+                     help="save a JSON metrics snapshot (pool/transport/"
+                     "backend/serve/cache counters) on exit")
+    obs.add_argument("--trace-out", default=None, metavar="PATH",
+                     help="save per-shard spans + accuracy-milestone "
+                     "instants as Chrome trace-event JSON (open in "
+                     "Perfetto or chrome://tracing)")
+    obs.add_argument("--flight-recorder", default=None, metavar="PATH",
+                     help="dump the last-N runtime events + a metrics "
+                     "snapshot to PATH when a serve aborts (exception, "
+                     "all-shards-lost batch, hang-abandon)")
     return ap
 
 
@@ -434,6 +449,16 @@ def main(argv=None):
     code = CODES[args.code].build(args.K, args.N)
     deadlines = tuple(float(x) for x in args.deadlines.split(","))
     print(f"[serve] config {_effective_config(args, deadlines)}")
+    # observability wiring: a live registry when anything will read it
+    # (the flight recorder snapshots it into every dump); None otherwise
+    # so every layer keeps its no-op instruments
+    from repro.obs import FlightRecorder, MetricsRegistry, Tracer
+    registry = MetricsRegistry() \
+        if (args.metrics_out is not None
+            or args.flight_recorder is not None) else None
+    tracer = Tracer() if args.trace_out is not None else None
+    flight = FlightRecorder(args.flight_recorder) \
+        if args.flight_recorder is not None else None
     if args.replay is not None:
         from repro.cluster import TraceRecording
         try:
@@ -452,7 +477,7 @@ def main(argv=None):
                 record=args.record is not None, grace=args.grace,
                 speculate=args.speculate, replicate=args.replicate,
                 max_requeue=args.max_requeue, compute=args.compute,
-                transport=args.transport, hosts=hosts)
+                transport=args.transport, hosts=hosts, metrics=registry)
         except ValueError as e:
             raise SystemExit(f"[serve] invalid arguments:\n  {e}")
     else:
@@ -466,7 +491,7 @@ def main(argv=None):
     cache = DecodeWeightCache(args.cache_size,
                               class_budget=args.class_cache or None,
                               track_classes=args.class_cache > 0
-                              or args.per_class) \
+                              or args.per_class, metrics=registry) \
         if args.cache_size > 0 and args.decoder == "incremental" else None
     policy = None
     if args.autotune:
@@ -490,7 +515,8 @@ def main(argv=None):
             threshold=args.hedge_threshold,
             max_per_batch=args.max_speculations)
     sched = MasterScheduler(code, backend, cfg, cache, policy=policy,
-                            speculation=speculation)
+                            speculation=speculation, metrics=registry,
+                            tracer=tracer, flight=flight)
     if args.profile_state is not None and os.path.exists(args.profile_state):
         from repro.design import load_state
         try:
@@ -536,7 +562,16 @@ def main(argv=None):
         sched.submit(A, B)
 
     t0 = time.time()
-    results = sched.run()
+    try:
+        results = sched.run()
+    except BaseException:
+        # an aborting serve is exactly what the flight recorder is for:
+        # dump the ring before the traceback unwinds the process
+        if flight is not None:
+            path = flight.dump("exception", registry)
+            print(f"[serve] flight recorder dumped {len(flight)} event(s) "
+                  f"to {path} (reason: exception)")
+        raise
     wall = time.time() - t0
 
     agg = {dl: [] for dl in deadlines}
@@ -612,6 +647,13 @@ def main(argv=None):
               f"{ps['replaced']} replaced ({ps['crashed']} crashed, "
               f"{ps['retired']} retired); {pool.size} active + "
               f"{pool.spares} spare at exit")
+        # shard-outcome tallies print unconditionally: cancellations and
+        # reaped duplicates happen outside --speculate too (crash promotes
+        # a racing copy, replication), and audits shouldn't need a rerun
+        print(f"[serve] pool shards: {ps['shards_lost']} lost, "
+              f"{ps['shards_cancelled']} cancelled, "
+              f"{ps['duplicates_reaped']} duplicate(s) reaped, "
+              f"{ps['shards_requeued']} re-queued")
         if sched.losses:
             lost = ", ".join(f"batch {b} shard {s} ({why})"
                              for b, s, why in sched.losses)
@@ -634,6 +676,18 @@ def main(argv=None):
             print(f"[serve] recorded {len(backend.recording)} batch "
                   f"trace(s) to {args.record}")
         backend.close()
+    if args.metrics_out is not None:
+        registry.save(args.metrics_out)
+        print(f"[serve] metrics snapshot saved to {args.metrics_out}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[serve] trace: {tracer.n_events} event(s) written to "
+              f"{args.trace_out} (open in Perfetto or chrome://tracing)")
+    if flight is not None:
+        for path in flight.dumps:
+            print(f"[serve] flight recorder dumped to {path}")
+        if not flight.dumps:
+            print("[serve] flight recorder armed; no abort, nothing dumped")
 
 
 if __name__ == "__main__":

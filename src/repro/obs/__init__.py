@@ -1,0 +1,24 @@
+"""Observability: metrics registry, per-shard tracer, crash flight recorder.
+
+The paper's contribution is a *time-resolved* accuracy curve — which shard
+finished when, and what the completion bought.  This package makes that
+observable on the live runtime instead of reconstructable from print lines:
+
+* :class:`MetricsRegistry` — named counters / gauges / histograms threaded
+  through the pool, transport, backend, scheduler and decode cache; a
+  disabled registry hands out shared no-op instruments so the hot path
+  pays one attribute call when observability is off.
+* :class:`Tracer` — per-shard spans assembled master-side from worker-
+  reported monotonic deltas (no clock sync needed), exported as
+  Chrome/Perfetto trace-event JSON keyed by worker lane.
+* :class:`FlightRecorder` — a bounded ring of recent events dumped (with a
+  metrics snapshot) when a serve aborts, so chaos failures in CI become
+  artifacts instead of log archaeology.
+"""
+from .flight import NULL_FLIGHT, FlightRecorder
+from .metrics import NULL_REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from .trace import NULL_TRACER, Tracer
+
+__all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "NULL_REGISTRY", "Tracer", "NULL_TRACER", "FlightRecorder",
+           "NULL_FLIGHT"]

@@ -28,6 +28,7 @@ from collections import OrderedDict
 import numpy as np
 
 from ..core.codes.base import CDCCode, DecodeInfo
+from ..obs import Counter
 
 __all__ = ["DecodeWeightCache"]
 
@@ -51,7 +52,7 @@ class DecodeWeightCache:
 
     def __init__(self, maxsize: int = 1024, *, class_budget: int | None = None,
                  class_budgets: dict | None = None,
-                 track_classes: bool = False):
+                 track_classes: bool = False, metrics=None):
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
         if class_budget is not None and class_budget < 1:
@@ -62,12 +63,26 @@ class DecodeWeightCache:
         if any(b < 1 for b in self.class_budgets.values()):
             raise ValueError("every class budget must be >= 1")
         self.track_classes = bool(track_classes)
-        self.hits = 0
-        self.misses = 0
+        # hit/miss live in obs counters: with a registry they surface as
+        # ``cache.*`` in its snapshot, without one they are free-standing —
+        # either way ``cache.hits`` stays a plain int for callers
+        reg = metrics if (metrics is not None
+                          and getattr(metrics, "enabled", False)) else None
+        self._metrics = reg
+        self._hits = reg.counter("cache.hits") if reg else Counter()
+        self._misses = reg.counter("cache.misses") if reg else Counter()
         self._od: OrderedDict[tuple, tuple[np.ndarray, DecodeInfo]] = \
             OrderedDict()
         self._class_od: dict = {}          # cls -> its budgeted OrderedDict
-        self._class_stats: dict = {}       # cls -> {"hits": n, "misses": n}
+        self._class_stats: dict = {}       # cls -> hit/miss Counter pair
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
 
     # ----------------------------------------------------------- class views
     @property
@@ -109,7 +124,14 @@ class DecodeWeightCache:
     # ------------------------------------------------------------ operations
     def _stats_for(self, cls) -> dict:
         if cls not in self._class_stats:
-            self._class_stats[cls] = {"hits": 0, "misses": 0}
+            reg = self._metrics
+            if reg is not None:
+                label = getattr(cls, "label", lambda: str(cls))()
+                pair = {"hits": reg.counter(f"cache.{label}.hits"),
+                        "misses": reg.counter(f"cache.{label}.misses")}
+            else:
+                pair = {"hits": Counter(), "misses": Counter()}
+            self._class_stats[cls] = pair
         return self._class_stats[cls]
 
     def _route(self, cls) -> OrderedDict:
@@ -125,14 +147,14 @@ class DecodeWeightCache:
         hit = od.get(key)
         st = self._stats_for(cls) if cls is not None else None
         if hit is None:
-            self.misses += 1
+            self._misses.inc()
             if st is not None:
-                st["misses"] += 1
+                st["misses"].inc()
             return None
         od.move_to_end(key)
-        self.hits += 1
+        self._hits.inc()
         if st is not None:
-            st["hits"] += 1
+            st["hits"].inc()
         return hit
 
     def _put(self, key: tuple, value: tuple[np.ndarray, DecodeInfo],
@@ -166,9 +188,10 @@ class DecodeWeightCache:
         fallback classes report ``budget: None``)."""
         out = {}
         for cls, st in self._class_stats.items():
-            total = st["hits"] + st["misses"]
-            entry = {"hits": st["hits"], "misses": st["misses"],
-                     "hit_rate": st["hits"] / total if total else 0.0,
+            hits, misses = st["hits"].value, st["misses"].value
+            total = hits + misses
+            entry = {"hits": hits, "misses": misses,
+                     "hit_rate": hits / total if total else 0.0,
                      "budget": self.budget_for(cls)}
             if cls in self._class_od:
                 entry["size"] = len(self._class_od[cls])

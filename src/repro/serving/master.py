@@ -34,12 +34,14 @@ abandoned.  :class:`AsyncMasterScheduler` survives as a back-compat alias.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..core.codes.base import CDCCode
+from ..obs import NULL_FLIGHT, NULL_REGISTRY, NULL_TRACER
 from .backends import ExecutionBackend, SimulatedBackend
 from .cache import DecodeWeightCache
 from .incremental import make_decoder
@@ -131,13 +133,24 @@ class MasterScheduler:
     def __init__(self, code: CDCCode, backend: ExecutionBackend | None = None,
                  config: ServeConfig | None = None,
                  cache: DecodeWeightCache | None = _DEFAULT_CACHE,
-                 policy=None, speculation=None):
+                 policy=None, speculation=None, metrics=None, tracer=None,
+                 flight=None):
         self.code = code
         self.backend = backend if backend is not None else SimulatedBackend()
         self.config = config if config is not None else ServeConfig()
         self.cache = DecodeWeightCache() if cache is _DEFAULT_CACHE else cache
         self.policy = policy
         self.speculation = speculation         # SpeculationPolicy (or None)
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.flight = flight if flight is not None else NULL_FLIGHT
+        # gate perf_counter pairs (a real cost even when discarded) on one
+        # bool instead of the registry's no-op instruments
+        self._m_on = self.metrics.enabled
+        self._g_queue = self.metrics.gauge("serve.queue_depth")
+        self._h_tick = self.metrics.histogram("serve.decode_tick_seconds")
+        self._h_ttfa = self.metrics.histogram("serve.tta_first_seconds")
+        self._h_tta = self.metrics.histogram("serve.tta_exact_seconds")
         if self.config.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.config.batch_size}")
@@ -177,6 +190,7 @@ class MasterScheduler:
         req_id = self._next_id
         self._next_id += 1
         self._queue.append(MatmulRequest(req_id, A, B))
+        self._g_queue.set(len(self._queue))
         return req_id
 
     @property
@@ -263,6 +277,7 @@ class MasterScheduler:
                    and (self._queue[0].A.shape,
                         self._queue[0].B.shape) == shape):
                 batch.append(self._queue.popleft())
+            self._g_queue.set(len(self._queue))
             cls = self._class_of(batch[0]) \
                 if (self.policy is not None and per_class) else None
             results.extend(self._serve_batch(batch, cls))
@@ -362,6 +377,11 @@ class MasterScheduler:
             n_shards=Nf if Nf != code.N else None, rng=self.rng)
         batch_no = self._batches_served
         self._batches_served += 1
+        # cluster dispatches carry a 1-based id; synthetic ones don't
+        bid = int(getattr(dispatch, "batch_id", batch_no + 1))
+        self.tracer.batch_begin(bid, Nf)
+        self.flight.record("dispatch", batch=bid, shards=Nf,
+                           requests=len(batch))
         deadlines = sorted(float(d) for d in cfg.deadlines)
         grace = float(getattr(self.backend, "grace", 2.0))
         dispatch.set_abandon((deadlines[-1] if deadlines else 0.0) + grace)
@@ -372,6 +392,8 @@ class MasterScheduler:
                 and hasattr(dispatch, "speculate")) else None
         R = code.recovery_threshold
         shard_times: dict[int, float] = {}
+        disp_t: dict[int, float] = {}      # shard -> latest redispatch time
+        timed_out = False                  # this batch abandoned shards
         m, di = 0, 0
         try:
             while di < len(deadlines) or dispatch.outstanding:
@@ -380,7 +402,7 @@ class MasterScheduler:
                     # final m whatever the clock says — flush them
                     for dl in deadlines[di:]:
                         self._emit(batch, decoders, refs, results, dl, m, R,
-                                   "deadline")
+                                   "deadline", bid)
                     di = len(deadlines)
                     break
                 timeout = None
@@ -388,7 +410,7 @@ class MasterScheduler:
                     timeout = deadlines[di] - dispatch.elapsed()
                     if timeout <= 0:
                         self._emit(batch, decoders, refs, results,
-                                   deadlines[di], m, R, "deadline")
+                                   deadlines[di], m, R, "deadline", bid)
                         di += 1
                         continue
                 if poll is not None:
@@ -408,22 +430,48 @@ class MasterScheduler:
                 # ticks flush before this event is ingested
                 while di < len(deadlines) and deadlines[di] < ev.t:
                     self._emit(batch, decoders, refs, results, deadlines[di],
-                               m, R, "deadline")
+                               m, R, "deadline", bid)
                     di += 1
                 if ev.kind == "done":
                     if ev.shard in shard_times:
                         continue           # defensive: dispatches dedup
                     m += 1
+                    spec = getattr(ev, "speculative", False)
+                    self.tracer.done(
+                        bid, ev.shard, ev.worker, ev.t,
+                        start=disp_t.get(ev.shard, 0.0) if spec else 0.0,
+                        timings=getattr(ev, "timings", None),
+                        speculative=spec)
                     for i, dec in enumerate(decoders):
                         dec.push(ev.shard, ev.products[i])
+                    self.tracer.decode_apply(bid, ev.shard, ev.t)
                     shard_times[ev.shard] = ev.t
+                    self.flight.record("done", batch=bid, shard=ev.shard,
+                                       worker=ev.worker, t=ev.t, m=m)
+                    if m == code.first_threshold:
+                        self.tracer.milestone(bid, "first-threshold", ev.t,
+                                              m=m)
+                    if m == R:
+                        self.tracer.milestone(bid, "exact", ev.t, m=m)
                     if cfg.stream:
                         self._emit(batch, decoders, refs, results, ev.t, m,
-                                   R, "event")
+                                   R, "event", bid)
                 elif ev.kind == "redispatch":      # speculation bookkeeping
                     self.speculations.append((batch_no, ev.shard, ev.reason))
+                    disp_t[ev.shard] = ev.t
+                    self.tracer.redispatch(bid, ev.shard, ev.worker, ev.t,
+                                           ev.reason)
+                    self.flight.record("redispatch", batch=bid,
+                                       shard=ev.shard, worker=ev.worker,
+                                       t=ev.t, reason=ev.reason)
                 else:                      # lost shard (crash/timeout)
                     self.losses.append((batch_no, ev.shard, ev.reason))
+                    timed_out = timed_out or ev.reason == "timeout"
+                    self.tracer.lost(bid, ev.shard, ev.worker, ev.t,
+                                     ev.reason)
+                    self.flight.record("lost", batch=bid, shard=ev.shard,
+                                       worker=ev.worker, t=ev.t,
+                                       reason=ev.reason)
                 if poll is not None:
                     self._maybe_speculate(dispatch, code, m, shard_times,
                                           deadlines)
@@ -435,6 +483,17 @@ class MasterScheduler:
         for res in results:
             res.ttfa = first_t
             res.t_exact = exact_t
+        if self._m_on:
+            for _ in results:              # TTA series is per *request*
+                if first_t is not None:
+                    self._h_ttfa.observe(first_t)
+                if exact_t is not None:
+                    self._h_tta.observe(exact_t)
+        if self.flight.enabled:
+            if Nf > 0 and not shard_times:
+                self.flight.dump("all-shards-lost", self.metrics)
+            elif timed_out:
+                self.flight.dump("hang-abandon", self.metrics)
         # observed completions feed the straggler profile: a full row keeps
         # per-shard identity (the empirical fitter's column marginals); a
         # lossy batch degrades to the pooled sample instead of fabricating
@@ -505,7 +564,9 @@ class MasterScheduler:
                 if not dispatch.speculate(shard, reason="hedge"):
                     return                 # no backup available: stop trying
 
-    def _emit(self, batch, decoders, refs, results, t, m, R, kind) -> None:
+    def _emit(self, batch, decoders, refs, results, t, m, R, kind,
+              bid: int = 0) -> None:
+        t0 = time.perf_counter() if self._m_on else 0.0
         for dec, (C, norm, _), res in zip(decoders, refs, results):
             est = dec.estimate()
             err = None
@@ -513,6 +574,10 @@ class MasterScheduler:
                 err = float(np.linalg.norm(est - C) ** 2 / norm)
             res.answers.append(Answer(t=t, m=m, rel_err=err,
                                       exact=m >= R, kind=kind))
+        if self._m_on:
+            self._h_tick.observe(time.perf_counter() - t0)
+        if kind == "deadline":
+            self.tracer.milestone(bid, "deadline-tick", t, m=m)
 
 
 class AsyncMasterScheduler(MasterScheduler):

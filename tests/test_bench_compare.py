@@ -75,6 +75,32 @@ def test_dropped_row_and_disappeared_metric_fail():
     assert "saved" in probs[0]
 
 
+def test_metrics_subdict_unknown_keys_are_ignored():
+    # observability counter snapshots ride rows as a `metrics` sub-dict:
+    # unknown names (pool.*, transport.* ...) must never trip the gate,
+    # and malformed payloads must not break the parse
+    base = [dict(BASE[0], metrics={"pool.crashed": 1,
+                                   "transport.bytes_sent": 9000,
+                                   "label": "not-a-number"})]
+    cur = [dict(BASE[0], metrics={"pool.crashed": 5,
+                                  "transport.bytes_sent": 1,
+                                  "extra.key": 7.5})]
+    assert compare_rows(base, cur, tolerance=0.2, time_tolerance=None) == []
+    assert compare_rows(base, [dict(BASE[0], metrics="garbage")],
+                        tolerance=0.2, time_tolerance=None) == []
+
+
+def test_metrics_subdict_known_keys_are_gated():
+    # a gated name inside the sub-dict behaves exactly like one parsed
+    # from the derived string — regression fails, improvement passes
+    base = [dict(BASE[0], metrics={"hit_rate": 80.0})]
+    good = [dict(BASE[0], metrics={"hit_rate": 90.0})]
+    bad = [dict(BASE[0], metrics={"hit_rate": 20.0})]
+    assert compare_rows(base, good, tolerance=0.2, time_tolerance=None) == []
+    probs = compare_rows(base, bad, tolerance=0.2, time_tolerance=None)
+    assert len(probs) == 1 and "hit_rate" in probs[0]
+
+
 def test_timing_gate_is_opt_in():
     slow = [dict(r, us_per_call=r["us_per_call"] * 10) for r in BASE]
     assert compare_rows(BASE, slow, tolerance=0.2, time_tolerance=None) == []

@@ -1,0 +1,306 @@
+"""Observability layer: metrics registry, per-shard tracer, flight recorder.
+
+Unit tests pin the instrument contracts (one instrument per name, no-op
+when disabled, kind-mismatch errors, histogram bucket placement, ring
+eviction, numbered dump siblings) and the Chrome trace-event export shape
+(JSON round-trip, non-negative durations, ``ph: "M"`` metadata carrying no
+timestamps).  Integration tests run real cluster serves under chaos and
+assert the invariants the ISSUE names: spans exist only for shards that
+completed, a speculative first-wins race applies exactly one decode per
+shard, registry counters mirror the pool's stats dict, and record/replay
+stays bit-identical with tracing enabled (spans are additive metadata).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import TraceRecording
+from repro.cluster.backend import ClusterBackend, ReplayBackend
+from repro.core import MatDotCode, x_complex
+from repro.design.policy import SpeculationPolicy
+from repro.launch.serve import build_parser
+from repro.obs import (NULL_FLIGHT, NULL_REGISTRY, NULL_TRACER,
+                       FlightRecorder, MetricsRegistry, Tracer)
+from repro.serving import DecodeWeightCache, MasterScheduler, ServeConfig
+
+K, N = 2, 4
+
+
+def _serve(sched, reqs):
+    for A, B in reqs:
+        sched.submit(A, B)
+    out = []
+    for res in sched.run():
+        out.append((res.ttfa, res.t_exact,
+                    [(a.t, a.m, a.rel_err, a.exact, a.kind)
+                     for a in res.answers]))
+    return out
+
+
+def _reqs(rng, n, rows=8, inner=4 * K):
+    return [(rng.standard_normal((rows, inner)),
+             rng.standard_normal((inner, rows))) for _ in range(n)]
+
+
+# ----------------------------------------------------------------- registry
+
+def test_registry_instruments_and_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("pool.crashed")
+    c.inc()
+    c.inc(3)
+    g = reg.gauge("serve.queue_depth")
+    g.set(7)
+    h = reg.histogram("serve.decode_tick_seconds")
+    h.observe(0.02)
+    h.observe(0.3)
+    snap = reg.snapshot()
+    assert snap["counters"]["pool.crashed"] == 4
+    assert snap["gauges"]["serve.queue_depth"] == 7
+    hv = snap["histograms"]["serve.decode_tick_seconds"]
+    assert hv["count"] == 2 and hv["min"] == 0.02 and hv["max"] == 0.3
+    assert sum(hv["counts"]) == 2
+
+
+def test_registry_same_name_same_instrument_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    with pytest.raises(ValueError, match="already registered as counter"):
+        reg.gauge("a")
+
+
+def test_disabled_registry_is_shared_noop():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    assert c is reg.gauge("y") is reg.histogram("z")   # one shared null
+    c.inc(100)
+    c.set(5)
+    c.observe(1.0)
+    assert c.value == 0
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+    assert NULL_REGISTRY.counter("anything") is c
+
+
+def test_histogram_bucket_placement():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 99.0):
+        h.observe(v)
+    assert h.counts == [1, 2, 1]            # ≤0.1, ≤1.0, overflow
+    assert h.to_value()["mean"] == pytest.approx(25.0125)
+
+
+def test_registry_save_round_trips(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("transport.bytes_sent").inc(1234)
+    path = reg.save(str(tmp_path / "m.json"))
+    doc = json.load(open(path))
+    assert doc["kind"] == "metrics-snapshot"
+    assert doc["counters"]["transport.bytes_sent"] == 1234
+
+
+# ----------------------------------------------------------- flight recorder
+
+def test_flight_ring_eviction_and_numbered_dumps(tmp_path):
+    fr = FlightRecorder(str(tmp_path / "flight.json"), capacity=3)
+    for i in range(5):
+        fr.record("tick", i=i)
+    assert len(fr) == 3                     # ring evicted the oldest two
+    reg = MetricsRegistry()
+    reg.counter("pool.crashed").inc()
+    p1 = fr.dump("hang-abandon", reg)
+    p2 = fr.dump("exception")
+    assert p1.endswith("flight.json") and p2.endswith("flight.2.json")
+    d1 = json.load(open(p1))
+    assert d1["kind"] == "flight-recorder"
+    assert d1["reason"] == "hang-abandon"
+    assert [e["i"] for e in d1["events"]] == [2, 3, 4]
+    assert d1["metrics"]["counters"]["pool.crashed"] == 1
+    assert "metrics" not in json.load(open(p2))
+    assert fr.dumps == [p1, p2]
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(str(tmp_path / "f.json"), capacity=0)
+
+
+def test_null_handles_are_inert():
+    NULL_FLIGHT.record("x", a=1)
+    assert NULL_FLIGHT.dump("exception") is None and len(NULL_FLIGHT) == 0
+    NULL_TRACER.batch_begin(1)
+    NULL_TRACER.done(1, 0, 0, 0.1)
+    NULL_TRACER.milestone(1, "exact", 0.1)
+    assert NULL_TRACER.n_events == 0
+    assert not (NULL_TRACER.enabled or NULL_FLIGHT.enabled
+                or NULL_REGISTRY.enabled)
+
+
+# ----------------------------------------------------------------- tracer
+
+def test_tracer_export_shape_round_trips():
+    tr = Tracer()
+    tr.batch_begin(1, n_shards=2)
+    tr.done(1, 0, 3, 0.08, timings=(0.01, 0.02, 0.04))
+    tr.done(1, 1, 4, 0.12, start=0.05, speculative=True)
+    tr.lost(1, 1, 0, 0.04, "crash")
+    tr.redispatch(1, 1, 4, 0.05, "requeue")
+    tr.decode_apply(1, 0, 0.08)
+    tr.milestone(1, "exact", 0.12, m=3)
+    doc = json.loads(json.dumps(tr.to_dict()))     # JSON round-trip
+    events = doc["traceEvents"]
+    spans = [e for e in events if e["ph"] == "X"]
+    instants = [e for e in events if e["ph"] == "i"]
+    meta = [e for e in events if e["ph"] == "M"]
+    # shard 0 parent span + nested operand-ship/compute, shard 1 plain span
+    assert {e["name"] for e in spans} == {"shard 0", "shard 1",
+                                          "operand-ship", "compute"}
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in spans)
+    assert all(e["ts"] >= 0 for e in instants)
+    assert all("ts" not in e for e in meta)        # M events carry no ts
+    # worker lanes named, master lane named
+    names = {(e["pid"], e["tid"], e["args"]["name"]) for e in meta
+             if e["name"] == "thread_name"}
+    assert (1, 3, "worker 3") in names and (1, 4, "worker 4") in names
+    assert (0, 0, "decode loop") in names
+    # the speculative span starts at its re-dispatch time, not batch start
+    shard1 = next(e for e in spans if e["name"] == "shard 1")
+    assert shard1["args"]["speculative"] is True
+    assert shard1["dur"] == pytest.approx(0.07 * 1e6, abs=1.0)
+    # loss/redispatch instants land on the owning worker's lane
+    lost = next(e for e in instants if e["name"] == "lost:crash")
+    assert lost["pid"] == 1 and lost["tid"] == 0
+
+
+def test_tracer_nested_spans_anchor_backwards_from_arrival():
+    tr = Tracer()
+    tr.batch_begin(1)
+    tr.done(1, 2, 5, 1.0, timings=(0.2, 0.3, 0.4))
+    spans = {e["name"]: e for e in tr.to_dict()["traceEvents"]
+             if e["ph"] == "X"}
+    base = spans["shard 2"]["ts"]
+    # compute ends at arrival; operand-ship ends where compute starts
+    assert spans["compute"]["ts"] - base == pytest.approx(0.6 * 1e6, abs=1.0)
+    assert spans["compute"]["dur"] == pytest.approx(0.4 * 1e6, abs=1.0)
+    assert spans["operand-ship"]["ts"] - base == pytest.approx(0.3 * 1e6,
+                                                               abs=1.0)
+    assert spans["operand-ship"]["dur"] == pytest.approx(0.3 * 1e6, abs=1.0)
+
+
+def test_tracer_save_is_loadable(tmp_path):
+    tr = Tracer()
+    tr.batch_begin(1)
+    tr.done(1, 0, 0, 0.01)
+    path = tr.save(str(tmp_path / "trace.json"))
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert any(e["ph"] == "X" for e in doc["traceEvents"])
+
+
+# ------------------------------------------------------------ cache metrics
+
+def test_cache_counters_surface_in_registry():
+    reg = MetricsRegistry()
+    cache = DecodeWeightCache(maxsize=4, metrics=reg)
+    cache.put(("k",), (np.zeros(2), None))
+    assert cache.get(("k",)) is not None
+    assert cache.get(("missing",)) is None
+    snap = reg.snapshot()["counters"]
+    assert snap["cache.hits"] == cache.hits == 1
+    assert snap["cache.misses"] == cache.misses == 1
+
+
+# ----------------------------------------------------- cluster integration
+
+def test_crash_serve_spans_only_for_completed_shards():
+    """crash:1 with no speculation: the dead worker's shard never completes,
+    so the tracer holds no span for it — and the registry's pool counters
+    mirror ``pool.stats`` exactly."""
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(3)
+    reqs = _reqs(rng, 4)
+    cfg = ServeConfig(deadlines=(1.0,), batch_size=2, seed=0)
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
+                        seed=2, grace=3.0, metrics=reg) as be:
+        sched = MasterScheduler(code, be, cfg, metrics=reg, tracer=tracer)
+        _serve(sched, reqs)
+        stats = dict(be.pool.stats)
+    lost = {(e[1], e[2]) for e in tracer.raw_events("lost")}
+    done = {(e[1], e[2]) for e in tracer.raw_events("done")}
+    assert lost, "the crash never surfaced as a lost event"
+    assert not (lost & done), "a never-completed shard grew a span"
+    # every span was decoded exactly once, and vice versa
+    decodes = [(e[1], e[2]) for e in tracer.raw_events("decode")]
+    assert sorted(decodes) == sorted(done)
+    snap = reg.snapshot()["counters"]
+    for key in ("shards_lost", "shards_cancelled", "crashed", "spawned",
+                "replaced"):
+        assert snap.get(f"pool.{key}", 0) == stats[key], key
+    assert snap["backend.batches_dispatched"] == 2
+    assert snap["backend.shards_dispatched"] == 2 * N
+
+
+def test_speculative_first_wins_decodes_exactly_once():
+    """hang:1 + speculation: the hedged shard races two copies; whichever
+    arrives first is the only one pushed into the decoders — exactly one
+    decode-apply per shard, and the winning span is marked speculative."""
+    code = MatDotCode(2, 3, x_complex(3, 0.1))
+    rng = np.random.default_rng(5)
+    reqs = _reqs(rng, 2)
+    cfg = ServeConfig(deadlines=(0.5,), batch_size=2, seed=0)
+    tracer = Tracer()
+    with ClusterBackend(workers=3, chaos="hang:1,sleep:0.005:0.02",
+                        seed=4, grace=2.0, speculate=True) as be:
+        sched = MasterScheduler(code, be, cfg, tracer=tracer,
+                                speculation=SpeculationPolicy())
+        _serve(sched, reqs)
+    assert sched.speculations                   # the hedge actually fired
+    assert tracer.raw_events("redispatch")
+    spec_done = [e for e in tracer.raw_events("done") if e[7]]
+    assert spec_done, "no speculative completion was traced"
+    decodes = [(e[1], e[2]) for e in tracer.raw_events("decode")]
+    assert len(decodes) == len(set(decodes)), \
+        "a shard was decode-applied more than once"
+    # the speculative span is anchored at its re-dispatch, not batch start
+    redisp = {(e[1], e[2]): e[4] for e in tracer.raw_events("redispatch")}
+    for e in spec_done:
+        assert e[5] == pytest.approx(redisp[(e[1], e[2])])
+
+
+def test_record_replay_bit_identity_with_tracing_enabled():
+    """Spans are additive metadata: a live run traced + metered end-to-end
+    must replay bit-identically from its recording (the replay side traced
+    too — neither recorder may perturb the decode path)."""
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    rng = np.random.default_rng(7)
+    reqs = _reqs(rng, 4)
+    cfg = ServeConfig(deadlines=(0.05, 0.2, 0.6), stream=True,
+                      batch_size=2, seed=0)
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    with ClusterBackend(workers=N, chaos="sleep:0.005:0.02", seed=1,
+                        record=True, metrics=reg) as be:
+        live = _serve(MasterScheduler(code, be, cfg, metrics=reg,
+                                      tracer=tracer), reqs)
+        rec = be.recording
+    assert tracer.n_events > 0
+    assert reg.snapshot()["counters"]["backend.batches_dispatched"] == 2
+    rec2 = TraceRecording.from_dict(rec.to_dict())   # JSON round-trip too
+    replay = _serve(MasterScheduler(code, ReplayBackend(rec2), cfg,
+                                    tracer=Tracer()), reqs)
+    assert live == replay
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_serve_parser_accepts_observability_flags():
+    args = build_parser().parse_args(
+        ["--metrics-out", "m.json", "--trace-out", "t.json",
+         "--flight-recorder", "f.json"])
+    assert args.metrics_out == "m.json"
+    assert args.trace_out == "t.json"
+    assert args.flight_recorder == "f.json"
+    defaults = build_parser().parse_args([])
+    assert defaults.metrics_out is None and defaults.trace_out is None
+    assert defaults.flight_recorder is None

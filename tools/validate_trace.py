@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON file emitted by ``repro.obs.Tracer``.
+
+CI runs this against the ``--trace-out`` artifact of the cluster smoke
+serve: a trace that Perfetto / ``chrome://tracing`` would reject (or one
+that silently lost its shard spans) should fail the build, not be
+discovered when somebody finally opens the artifact.
+
+Checks, per the trace-event format:
+
+* top level is an object with a ``traceEvents`` list;
+* every event has ``name``, ``ph``, ``pid``;
+* ``"X"`` (complete) events carry numeric ``ts``/``dur`` with ``ts >= 0``
+  and ``dur >= 0``, plus a ``tid`` — a negative duration renders as garbage;
+* ``"i"`` (instant) events carry ``ts >= 0`` and a valid scope;
+* ``"M"`` (metadata) events are exempt from ``ts`` — the spec gives them
+  none, and requiring one is the classic false positive;
+* the trace contains at least one shard span and at least one instant
+  (a milestone or decode-apply) — an empty-but-well-formed trace means the
+  tracer was never threaded through the serve.
+
+Usage: ``python tools/validate_trace.py TRACE.json [TRACE2.json ...]``
+Exits non-zero with a per-file message on the first failure.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+VALID_PHASES = {"X", "i", "M", "B", "E", "C"}
+INSTANT_SCOPES = {"g", "p", "t"}
+
+
+def validate(path: str) -> list[str]:
+    """All problems with the trace at ``path`` (empty list = valid)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"unreadable: {exc}"]
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level must be an object with a 'traceEvents' key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+
+    problems: list[str] = []
+    n_spans = n_instants = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        for field in ("name", "ph", "pid"):
+            if field not in ev:
+                problems.append(f"{where}: missing '{field}'")
+        ph = ev.get("ph")
+        if ph not in VALID_PHASES:
+            problems.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            continue                      # metadata events carry no ts/dur
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool) \
+                or ts < 0:
+            problems.append(f"{where} ({ev.get('name')!r}): bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or isinstance(dur, bool) \
+                    or dur < 0:
+                problems.append(f"{where} ({ev.get('name')!r}): bad dur "
+                                f"{dur!r}")
+            if "tid" not in ev:
+                problems.append(f"{where}: X event without tid")
+            n_spans += 1
+        elif ph == "i":
+            if ev.get("s", "t") not in INSTANT_SCOPES:
+                problems.append(f"{where}: bad instant scope {ev.get('s')!r}")
+            n_instants += 1
+
+    if n_spans == 0:
+        problems.append("no spans (ph='X') at all — shard spans missing")
+    if n_instants == 0:
+        problems.append("no instants (ph='i') — milestones/decode-apply "
+                        "missing")
+    return problems
+
+
+def main(argv=None) -> None:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        raise SystemExit("usage: validate_trace.py TRACE.json [...]")
+    failed = False
+    for path in paths:
+        problems = validate(path)
+        if problems:
+            failed = True
+            print(f"[validate_trace] {path}: {len(problems)} problem(s)",
+                  file=sys.stderr)
+            for p in problems[:20]:
+                print(f"  {p}", file=sys.stderr)
+        else:
+            with open(path) as f:
+                n = len(json.load(f)["traceEvents"])
+            print(f"[validate_trace] {path}: OK ({n} events)")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
