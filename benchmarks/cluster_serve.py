@@ -63,7 +63,7 @@ import numpy as np
 from repro.cluster.backend import ClusterBackend
 from repro.core import MatDotCode, x_complex
 from repro.design import SpeculationPolicy
-from repro.serving import AsyncMasterScheduler, MasterScheduler, ServeConfig
+from repro.serving import MasterScheduler, ServeConfig
 
 from .common import emit, save_rows, timed
 
@@ -88,7 +88,7 @@ def _serve_arm(N: int, workers_start: int, seed: int):
         # measured completion clock (lease blocks on the ready handshake)
         backend.pool.lease(workers_start)
         cfg = ServeConfig(deadlines=(DEADLINE,), batch_size=2, seed=seed)
-        sched = AsyncMasterScheduler(code, backend, cfg)
+        sched = MasterScheduler(code, backend, cfg)
         rng = np.random.default_rng(seed)
         for _ in range(REQUESTS):
             sched.submit(rng.standard_normal((ROWS, INNER)),
@@ -196,7 +196,7 @@ def _serve_transport_arm(transport: str, seed: int) -> float:
     try:
         backend.pool.lease(N_PINNED)
         cfg = ServeConfig(deadlines=(DEADLINE,), batch_size=2, seed=seed)
-        sched = AsyncMasterScheduler(code, backend, cfg)
+        sched = MasterScheduler(code, backend, cfg)
         rng = np.random.default_rng(seed)
         for _ in range(REQUESTS):
             sched.submit(rng.standard_normal((ROWS, INNER)),

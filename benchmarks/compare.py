@@ -51,9 +51,10 @@ NOISE_FLOOR = 1e-12
 # metric-key direction tables.  Prefix-matched (err_m8, err_at_R, λ0.001 ...)
 # so new benchmarks get gated without touching this file as long as they
 # reuse the naming vocabulary.
-HIGHER_BETTER = ("vs_worst", "saved", "hit_rate", "reach")
+HIGHER_BETTER = ("vs_worst", "saved", "hit_rate", "reach", "p99_gain",
+                 "goodput")
 LOWER_BETTER = ("err", "approx_err", "max_rel_dev", "vs_best", "λ", "lam",
-                "mean_ttfa", "elastic_ws")
+                "mean_ttfa", "elastic_ws", "p99_tta")
 # wall-clock ratios: transferable but load-sensitive — wider tolerance
 RATIO_HIGHER = ("speedup", "rps_gain")
 # machine-dependent absolutes: only gated with an explicit --time-tolerance

@@ -1,0 +1,189 @@
+"""Open-loop load benchmark: admission control + EDF vs naive FIFO.
+
+Drives Poisson arrivals from two tenants (an interactive class with a loose
+accuracy target and a tight deadline, and a batch class with a tight target
+and a loose deadline) at a fixed offered load *above* the closed-loop
+capacity of the service — the regime where a closed-loop benchmark cannot
+even pose the question, because its arrival rate collapses to the service
+rate.  Two arms serve the identical workload on the simulated backend:
+
+* **fifo**    — the naive baseline: FIFO order, unbounded queue, no
+  shedding.  Under overload its queue grows without bound and every
+  request's time-to-target-accuracy inflates with its queue position.
+* **policy**  — deadline-aware EDF batching + bounded queue with
+  shed-on-overload + expired-request dropping: the scheduler keeps latency
+  bounded by refusing work it cannot serve in time.
+
+Reported per arm and per tenant: p99 time-to-target-accuracy (TTA — first
+instant the running estimate meets the tenant's relative-error target;
+censored at the sojourn time when it never does) and goodput (SLO hits per
+second of horizon).  The acceptance gate — asserted in quick mode and CI —
+is the paper-level claim for the serving layer: at ~2x overload the policy
+arm beats FIFO by >= 1.5x on p99 TTA at equal-or-better goodput.
+
+A small realtime arm replays the same shape against the cluster backend
+(real worker pool, wall-clock arrivals).  Its ``rt_*`` metrics are emitted
+for the artifact but deliberately not gated: wall-clock tails on a shared
+CI runner are noise.
+
+The full report (both arms' :class:`repro.serving.LoadReport` payloads)
+is written to ``results/bench/load_slo_report.json`` for the CI artifact.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core import MatDotCode, x_complex
+from repro.ioutil import write_json_atomic
+from repro.serving import (MasterScheduler, ServeConfig, SimulatedBackend,
+                           TenantSpec, build_workload, make_backend,
+                           run_load)
+
+from .common import RESULTS_DIR, TRIALS, emit, save_rows
+
+SEED = 29
+OVERLOAD = 3.0                 # offered load as a multiple of capacity
+QUEUE_LIMIT = 6
+BATCH = 4
+K, N = 4, 8
+STRAGGLER_FRAC = 0.15
+DEADLINES = (0.6, 1.2, 2.4)    # answer ticks (relative to dispatch)
+
+TENANTS = (
+    TenantSpec("interactive", rows=24, inner=96, target_error=3e-1,
+               deadline=3.0, weight=2.0),
+    TenantSpec("batch", rows=32, inner=128, target_error=1e-2,
+               deadline=8.0, weight=1.0),
+)
+
+
+def make_code():
+    from repro.core import LayerSACCode
+    return LayerSACCode(K, N, base="ortho", eps=6.25e-3)
+
+
+def make_sched(*, policy: bool) -> MasterScheduler:
+    cfg = ServeConfig(
+        deadlines=DEADLINES, batch_size=BATCH, seed=SEED,
+        queue_policy="edf" if policy else "fifo",
+        queue_limit=QUEUE_LIMIT if policy else None,
+        shed_expired=policy)
+    return MasterScheduler(make_code(),
+                           SimulatedBackend(straggler_frac=STRAGGLER_FRAC),
+                           cfg)
+
+
+def closed_loop_capacity(n: int) -> float:
+    """Requests/sec the service sustains with an always-full queue."""
+    wl = build_workload(TENANTS, rate=1.0, horizon=float(n), seed=SEED)[:n]
+    wl = [replace(r, arrival=0.0) for r in wl]
+    sched = make_sched(policy=False)
+    results = sched.run_open(wl)
+    makespan = max(r.t_done for r in results)
+    return len(results) / makespan
+
+
+def sim_arms(offered_rate: float, horizon: float) -> dict:
+    wl = build_workload(TENANTS, rate=offered_rate, horizon=horizon,
+                       seed=SEED + 1)
+    out = {}
+    for name, policy in (("fifo", False), ("policy", True)):
+        sched = make_sched(policy=policy)
+        out[name] = run_load(sched, wl, horizon=horizon)
+    return out
+
+
+def cluster_arm() -> dict | None:
+    """Realtime open loop against the worker pool (small, ungated)."""
+    tenants = (TenantSpec("rt", rows=16, inner=64, target_error=0.5,
+                          deadline=1.5),)
+    rate, horizon = 6.0, 2.0
+    wl = build_workload(tenants, rate=rate, horizon=horizon, seed=SEED)
+    code = MatDotCode(2, 4, x_complex(4, 0.1))
+    backend = make_backend("cluster", workers=4, seed=SEED)
+    try:
+        cfg = ServeConfig(deadlines=(0.5, 1.0), batch_size=2, seed=SEED,
+                          queue_policy="edf", queue_limit=QUEUE_LIMIT,
+                          shed_expired=True)
+        sched = MasterScheduler(code, backend, cfg)
+        report = run_load(sched, wl, horizon=horizon)
+    finally:
+        backend.close()
+    emit("load_slo/cluster", report.p99_tta * 1e6,
+         f"rt_p99_tta={report.p99_tta:.3f};rt_goodput={report.goodput:.3f};"
+         f"rt_served={report.served};rt_shed={report.shed}")
+    return report.to_dict()
+
+
+def main(quick: bool | None = None, report_path: str | None = None):
+    if quick is None:
+        quick = TRIALS < 50            # run.py --quick sets TRIALS=10
+    capacity = closed_loop_capacity(16 if quick else 48)
+    offered_rate = OVERLOAD * capacity
+    horizon = (48 if quick else 160) / offered_rate
+    arms = sim_arms(offered_rate, horizon)
+    fifo, pol = arms["fifo"], arms["policy"]
+
+    gain = fifo.p99_tta / max(pol.p99_tta, 1e-9)
+    rows = []
+    for name, rep in (("fifo", fifo), ("policy", pol)):
+        emit(f"load_slo/sim_{name}", rep.p99_tta * 1e6,
+             f"p99_tta={rep.p99_tta:.3f};goodput={rep.goodput:.3f};"
+             f"served={rep.served};shed={rep.shed};dropped={rep.dropped}")
+        for tname, t in sorted(rep.tenants.items()):
+            rows.append((name, tname, t["offered"], t["served"], t["shed"],
+                         t["dropped"], f"{t['goodput']:.3f}",
+                         f"{t['p50_tta']:.3f}", f"{t['p99_tta']:.3f}"))
+    for tname, t in sorted(pol.tenants.items()):
+        emit(f"load_slo/tenant_{tname}", t["p99_tta"] * 1e6,
+             f"p99_tta={t['p99_tta']:.3f};goodput={t['goodput']:.3f}")
+    emit("load_slo/gate", pol.p99_tta * 1e6,
+         f"p99_gain={gain:.2f}x;"
+         f"goodput_ratio={pol.goodput / max(fifo.goodput, 1e-9):.3f};"
+         f"offered_over_capacity={offered_rate / capacity:.2f}")
+    save_rows("load_slo.csv",
+              "arm,tenant,offered,served,shed,dropped,goodput,p50_tta,"
+              "p99_tta", rows)
+
+    cluster = None
+    if os.environ.get("REPRO_BENCH_NO_CLUSTER", "") != "1":
+        cluster = cluster_arm()
+    payload = {"kind": "load-slo-report",
+               "capacity_rps": capacity, "offered_rps": offered_rate,
+               "horizon": horizon,
+               "gate": {"p99_gain": gain, "threshold": 1.5,
+                        "goodput_fifo": fifo.goodput,
+                        "goodput_policy": pol.goodput,
+                        "passed": bool(gain >= 1.5
+                                       and pol.goodput >= fifo.goodput)},
+               "arms": {"sim_fifo": fifo.to_dict(),
+                        "sim_policy": pol.to_dict(),
+                        "cluster": cluster}}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = report_path or os.path.join(RESULTS_DIR, "load_slo_report.json")
+    write_json_atomic(path, payload, indent=2)
+
+    # the SLO gate: deadline-aware batching + admission control must beat
+    # naive FIFO >= 1.5x on p99 TTA without giving up goodput — in quick
+    # mode too (this is the CI load-smoke assertion)
+    assert gain >= 1.5, \
+        f"p99 TTA gain {gain:.2f}x below the 1.5x gate (fifo " \
+        f"{fifo.p99_tta:.3f}s vs policy {pol.p99_tta:.3f}s)"
+    assert pol.goodput >= fifo.goodput, \
+        f"policy goodput {pol.goodput:.3f} below fifo {fifo.goodput:.3f}"
+    return gain
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (small capacity probe + horizon)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="where to write the JSON report (default "
+                    "results/bench/load_slo_report.json)")
+    a = ap.parse_args()
+    main(quick=a.quick or None, report_path=a.report)

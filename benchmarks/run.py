@@ -29,21 +29,24 @@ def main(argv=None) -> None:
         os.environ.setdefault("REPRO_BENCH_TRIALS", "10")
         os.environ.setdefault("REPRO_BENCH_NZ", "2000")
     # import AFTER the env is set: common.py reads it at import time
+    from repro.names import unknown_name
+
     from . import (cluster_serve, common, design_pareto, engine_speedup,
                    fig2_error_sources, fig3a_tradeoff, fig3b_correlation,
-                   fleet_elastic, kernel_bench, serve_throughput,
+                   fleet_elastic, kernel_bench, load_slo, serve_throughput,
                    table1_thresholds)
     mods = [table1_thresholds, fig3a_tradeoff, fig2_error_sources,
             fig3b_correlation, engine_speedup, serve_throughput,
-            design_pareto, fleet_elastic, cluster_serve, kernel_bench]
+            design_pareto, fleet_elastic, cluster_serve, load_slo,
+            kernel_bench]
     if args.only:
         valid = {m.__name__.rsplit(".", 1)[-1] for m in mods}
         wanted = {w.strip() for w in args.only.split(",") if w.strip()}
         unknown = sorted(wanted - valid)
         if unknown or not wanted:
-            raise SystemExit(
-                f"--only: unknown module name(s) {unknown or [args.only]}; "
-                f"valid names: {', '.join(sorted(valid))}")
+            raise SystemExit(str(unknown_name(
+                "--only bench module", ",".join(unknown) or args.only,
+                sorted(valid))))
         mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in wanted]
     print("name,us_per_call,derived")
     failures = 0

@@ -354,6 +354,7 @@ class ClusterBackend(ExecutionBackend):
     """
 
     name = "cluster"
+    live = True                    # events are wall-clocked measurements
 
     def __init__(self, *, workers: int = 4, spares: int = 0,
                  chaos=None, seed: int = 0, record: bool = False,

@@ -42,6 +42,7 @@ from multiprocessing import shared_memory
 
 import numpy as np
 
+from ..names import unknown_name
 from ..obs import NULL_REGISTRY
 from .config import global_config
 
@@ -548,8 +549,7 @@ def make_transport(spec, *, ctx=None, hosts=None, metrics=None) -> Transport:
     elif name == "socket":
         tr = SocketTransport(hosts=hosts)
     else:
-        raise ValueError(f"unknown transport {name!r}; valid transports: "
-                         f"{', '.join(TRANSPORT_NAMES)}")
+        raise unknown_name("transport", name, TRANSPORT_NAMES)
     if metrics is not None:
         tr.bind_metrics(metrics)
     return tr
@@ -664,5 +664,4 @@ def make_worker_endpoint(arg):
         return LocalWorkerEndpoint(arg[1], arg[2])
     if kind == "socket":
         return SocketWorkerEndpoint(arg[1], arg[2], arg[3])
-    raise ValueError(f"unknown endpoint kind {kind!r}; valid: "
-                     f"{', '.join(TRANSPORT_NAMES)}")
+    raise unknown_name("endpoint kind", kind, TRANSPORT_NAMES)

@@ -53,6 +53,7 @@ from dataclasses import dataclass, replace
 
 import numpy as np
 
+from ..names import unknown_name
 from .config import global_config
 
 __all__ = ["ChaosSpec", "WorkerPlan", "ShardComputer", "NumpyShardComputer",
@@ -106,10 +107,10 @@ class ChaosSpec:
                     kw["slow"] = int(count)
                     kw["slow_delay"] = float(delay)
                 else:
-                    raise ValueError(
-                        f"unknown chaos kind {kind!r} in {part!r}; valid: "
-                        "sleep:LO:HI, slow:COUNT:DELAY, crash:COUNT, "
-                        "hang:COUNT")
+                    raise unknown_name(
+                        "chaos kind", kind,
+                        ("sleep:LO:HI", "slow:COUNT:DELAY", "crash:COUNT",
+                         "hang:COUNT"))
             except (TypeError, ValueError) as e:
                 if "unknown chaos kind" in str(e):
                     raise
@@ -167,8 +168,7 @@ class ComputeSpec:
         cfg = global_config
         kind = cfg.compute if spec is None else str(spec)
         if kind not in COMPUTE_NAMES:
-            raise ValueError(f"unknown compute kind {kind!r}; valid: "
-                             f"{', '.join(COMPUTE_NAMES)}")
+            raise unknown_name("compute kind", kind, COMPUTE_NAMES)
         return ComputeSpec(kind=kind,
                            host_device_count=cfg.host_device_count,
                            use_pallas=cfg.use_pallas,

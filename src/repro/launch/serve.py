@@ -88,18 +88,19 @@ import argparse
 import json
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
 from repro.core import (EpsApproxMatDotCode, GroupSACCode, LayerSACCode,
                         MatDotCode, x_complex)
+from repro.ioutil import write_json_atomic
 from repro.serving import (DecodeWeightCache, MasterScheduler, ServeConfig,
                            make_backend, serve_request)
 
-__all__ = ["CODES", "build_code", "build_parser", "validate_args",
-           "serve_request", "main"]
+__all__ = ["CODES", "ServeReport", "build_code", "build_parser",
+           "validate_args", "serve_request", "run_serve", "main"]
 
 
 def _auto_groups(K: int) -> list[int]:
@@ -199,6 +200,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stream", action="store_true",
                     help="emit an answer at every completion event")
+    ap.add_argument("--json", action="store_true",
+                    help="print the run as one serve-report JSON document "
+                    "instead of the [serve] text lines")
     ap.add_argument("--batch-size", type=int, default=4,
                     help="requests encoded/dispatched together")
     ap.add_argument("--decoder", default="incremental",
@@ -439,16 +443,79 @@ def _effective_config(args, deadlines) -> str:
     return json.dumps(cfg, sort_keys=True)
 
 
-def main(argv=None):
-    args = build_parser().parse_args(argv)
+@dataclass
+class ServeReport:
+    """JSON-serializable record of one serve run (the ``--json`` payload).
 
+    Every field is plain data (dicts / lists / scalars), so the report
+    round-trips through :meth:`to_json` / :meth:`from_json` unchanged and CI
+    can assert on stable fields instead of grepping renderer text.  The text
+    renderer (:func:`_render_report`) is a pure function of this object.
+    """
+
+    config: dict                      # effective config (+ problem shape)
+    code: dict                        # served code + render context
+    requests: list = field(default_factory=list)   # per-request answers
+    summary: dict = field(default_factory=dict)    # wall / rps / deadlines
+    cache: dict | None = None         # decode-weight cache stats
+    autotune: dict | None = None      # restore / retune / save trail
+    cluster: dict | None = None       # pool + speculation + record stats
+    observability: dict | None = None  # metrics / trace / flight paths
+
+    def to_dict(self) -> dict:
+        return {"kind": "serve-report", "config": self.config,
+                "code": self.code, "requests": self.requests,
+                "summary": self.summary, "cache": self.cache,
+                "autotune": self.autotune, "cluster": self.cluster,
+                "observability": self.observability}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeReport":
+        if d.get("kind") != "serve-report":
+            raise ValueError(f"not a serve-report payload: "
+                             f"kind={d.get('kind')!r}")
+        return cls(config=d["config"], code=d["code"],
+                   requests=d["requests"], summary=d["summary"],
+                   cache=d.get("cache"), autotune=d.get("autotune"),
+                   cluster=d.get("cluster"),
+                   observability=d.get("observability"))
+
+    def to_json(self, *, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServeReport":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> str:
+        return write_json_atomic(path, self.to_dict())
+
+
+def _scalar(x):
+    """numpy scalar -> python scalar (json-safe), preserving int vs float."""
+    return x.item() if hasattr(x, "item") else x
+
+
+def run_serve(args) -> ServeReport:
+    """Run one serve configuration end to end; no output except aborts.
+
+    The programmatic core behind :func:`main`: builds the backend /
+    scheduler / policies from a parsed-args namespace, runs the request
+    batch, and returns a :class:`ServeReport`.  Side-effect files
+    (--record, --metrics-out, --trace-out, --profile-state) are written
+    here; only their paths land in the report.  Raises ``SystemExit`` with
+    the same actionable messages as the CLI for invalid configurations.
+    """
     problems = _collect_problems(args)
     if problems:
         raise SystemExit("[serve] invalid arguments:\n  " +
                          "\n  ".join(problems))
     code = CODES[args.code].build(args.K, args.N)
     deadlines = tuple(float(x) for x in args.deadlines.split(","))
-    print(f"[serve] config {_effective_config(args, deadlines)}")
+    config = json.loads(_effective_config(args, deadlines))
+    config.update(rows=args.rows, inner=args.inner,
+                  straggler_frac=args.straggler_frac,
+                  cache_size=args.cache_size, class_cache=args.class_cache)
     # observability wiring: a live registry when anything will read it
     # (the flight recorder snapshots it into every dump); None otherwise
     # so every layer keeps its no-op instruments
@@ -487,7 +554,7 @@ def main(argv=None):
                       batch_size=args.batch_size, beta_mode=args.beta,
                       decoder=args.decoder, seed=args.seed)
     # the recompute baseline never consults the cache — don't create one,
-    # so the stats line only prints when caching is actually in play
+    # so the stats section only appears when caching is actually in play
     cache = DecodeWeightCache(args.cache_size,
                               class_budget=args.class_cache or None,
                               track_classes=args.class_cache > 0
@@ -517,6 +584,12 @@ def main(argv=None):
     sched = MasterScheduler(code, backend, cfg, cache, policy=policy,
                             speculation=speculation, metrics=registry,
                             tracer=tracer, flight=flight)
+    tune_report = None
+    if args.autotune:
+        tune_report = {"restored": False, "restored_from": None,
+                       "restored_picks": [], "retunes": [],
+                       "no_retune": None, "state_saved": None,
+                       "classes_saved": None, "space": len(policy.space)}
     if args.profile_state is not None and os.path.exists(args.profile_state):
         from repro.design import load_state
         try:
@@ -528,34 +601,27 @@ def main(argv=None):
             sched.set_code(warm_code, cls=cls)
         labels = [policy._state(cls).current_spec.label()
                   for cls in warm] or ["(no pick yet)"]
-        print(f"[serve] restored profile state from {args.profile_state}: "
-              f"{len(warm)} warm pick(s) [{', '.join(labels)}] — "
-              "cold-start window skipped")
+        tune_report.update(restored=True, restored_from=args.profile_state,
+                           restored_picks=labels)
     # after the warm restore: set_code intentionally resets the fleet cap
     # (it was sized for the previous code), so the operator's explicit
     # --fleet must be applied to whatever code actually starts serving
+    fleet_of = None
     if args.fleet is not None:
         try:
             sched.set_fleet(args.fleet)
         except ValueError as e:
             raise SystemExit(f"[serve] invalid arguments:\n  --fleet: {e}")
-        print(f"[serve] fleet restricted to the first {args.fleet} of "
-              f"{sched.code.N} shards")
+        fleet_of = sched.code.N
 
     rng = np.random.default_rng(args.seed)
-    tune = (f" autotune(target={args.target_error:g}, "
-            f"window={args.profile_window}, "
-            f"space={len(policy.space)})" if policy else "")
-    extra = ""
-    if args.backend == "cluster":
-        extra = (f" workers={args.workers} spares={args.spares} "
-                 f"chaos={args.chaos or 'none'} compute={args.compute} "
-                 f"transport={args.transport} (deadlines are wall-clock "
-                 "seconds)")
-    print(f"[serve] code={args.code} K={args.K} N={args.N} "
-          f"R={code.recovery_threshold} first={code.first_threshold} "
-          f"straggler_frac={args.straggler_frac} decoder={args.decoder} "
-          f"backend={args.backend} batch={args.batch_size}{tune}{extra}")
+    code_report = {"name": args.code, "K": args.K, "N": args.N,
+                   "R": code.recovery_threshold,
+                   "first": code.first_threshold,
+                   "straggler_frac": args.straggler_frac,
+                   "decoder": args.decoder, "backend": args.backend,
+                   "batch": args.batch_size, "fleet": args.fleet,
+                   "fleet_of": fleet_of}
     for _ in range(args.requests):
         A = rng.standard_normal((args.rows, args.inner))
         B = rng.standard_normal((args.inner, args.rows))
@@ -576,16 +642,15 @@ def main(argv=None):
 
     agg = {dl: [] for dl in deadlines}
     ttfa = []
+    requests = []
     for res in results:
-        ticks = [a for a in res.answers if a.kind == "deadline"]
-        line = " | ".join(
-            f"t={a.t:.1f}: m={a.m:2d} " +
-            (f"err={a.rel_err:.2e}" if a.rel_err is not None
-             else "no-estimate")
-            for a in ticks)
-        print(f"[serve] req {res.req_id}: {line}")
-        for a in ticks:
-            if a.rel_err is not None:
+        answers = [{"t": _scalar(a.t), "m": int(a.m), "kind": a.kind,
+                    "rel_err": (None if a.rel_err is None
+                                else float(a.rel_err))}
+                   for a in res.answers]
+        requests.append({"req_id": res.req_id, "answers": answers})
+        for a in res.answers:
+            if a.kind == "deadline" and a.rel_err is not None:
                 agg[a.t].append(a.rel_err)
         # the time a client actually received the first estimate: the first
         # emitted answer carrying one (in deadline mode that is the tick
@@ -594,59 +659,178 @@ def main(argv=None):
                      None)
         if first is not None:
             ttfa.append(first)
-    rps = len(results) / max(wall, 1e-9)
-    first = f"; mean time-to-first-answer {np.mean(ttfa):.3f}" if ttfa else ""
-    print(f"[serve] {len(results)} requests in {wall:.2f}s "
-          f"({rps:.1f} req/s){first}")
-    for dl in deadlines:
-        if agg[dl]:
-            print(f"[serve] deadline {dl:.1f}: mean rel err "
-                  f"{np.mean(agg[dl]):.3e} over {len(agg[dl])} answers")
+    summary = {"requests": len(results), "wall_s": wall,
+               "rps": len(results) / max(wall, 1e-9),
+               "mean_ttfa": float(np.mean(ttfa)) if ttfa else None,
+               "deadlines": [{"deadline": dl,
+                              "mean_err": float(np.mean(agg[dl])),
+                              "answers": len(agg[dl])}
+                             for dl in deadlines if agg[dl]]}
+    cache_report = None
     if cache is not None:
         st = cache.stats()
-        print(f"[serve] decode-weight cache: {st['hits']} hits / "
-              f"{st['misses']} misses (hit rate {st['hit_rate']:.0%}, "
-              f"size {st['size']})")
+        cache_report = {"hits": int(st["hits"]), "misses": int(st["misses"]),
+                        "hit_rate": float(st["hit_rate"]),
+                        "size": int(st["size"]), "classes": []}
         for cls, cst in sorted(cache.class_stats().items(),
                                key=lambda kv: kv[0].label()):
-            budget = (f"budget {cst['budget']}" if cst["budget"] is not None
-                      else "shared")
-            size = f", size {cst['size']}" if "size" in cst else ""
-            print(f"[serve]   class {cls.label()}: {cst['hits']} hits / "
-                  f"{cst['misses']} misses (hit rate {cst['hit_rate']:.0%}, "
-                  f"{budget}{size})")
+            row = {"label": cls.label(), "hits": int(cst["hits"]),
+                   "misses": int(cst["misses"]),
+                   "hit_rate": float(cst["hit_rate"]),
+                   "budget": cst["budget"]}
+            if "size" in cst:
+                row["size"] = int(cst["size"])
+            cache_report["classes"].append(row)
     if policy is not None:
         for ev in policy.history:
-            mark = "switch ->" if ev.switched else "keep"
-            cls = f" [{ev.cls.label()}]" if ev.cls is not None else ""
-            trig = f", {ev.trigger}" if ev.trigger != "window" else ""
-            print(f"[serve] retune @{ev.n_seen} req{cls} "
-                  f"({ev.profile.kind} profile, ks={ev.profile.ks:.3f}"
-                  f"{trig}): {mark} {ev.point.spec.label()} "
-                  f"(E[err@{min(deadlines):g}]={ev.point.err_at_deadline:.2e},"
-                  f" tta={ev.point.tta:.2f}, cost={ev.point.cost})")
+            tune_report["retunes"].append({
+                "n_seen": int(ev.n_seen),
+                "cls": ev.cls.label() if ev.cls is not None else None,
+                "profile_kind": ev.profile.kind,
+                "ks": float(ev.profile.ks), "trigger": ev.trigger,
+                "switched": bool(ev.switched),
+                "pick": ev.point.spec.label(),
+                "err_at_deadline": float(ev.point.err_at_deadline),
+                "tta": float(ev.point.tta),
+                "cost": _scalar(ev.point.cost)})
         if not policy.history:
             restored = any(policy._state(c).tuned for c in policy.classes())
-            if restored:
-                print("[serve] autotune: no retune fired this run "
-                      "(restored picks stayed; drift never triggered)")
-            else:
-                print(f"[serve] autotune: window {args.profile_window} "
-                      f"never filled ({args.requests} requests) — no "
-                      "retune ran")
+            tune_report["no_retune"] = "restored" if restored else "window"
         if args.profile_state is not None:
             from repro.design import save_state
             save_state(policy, args.profile_state)
-            print(f"[serve] saved profile state to {args.profile_state} "
-                  f"({len(policy.classes())} class(es))")
+            tune_report.update(state_saved=args.profile_state,
+                               classes_saved=len(policy.classes()))
+    cluster_report = None
     if args.backend == "cluster":
         pool = backend.pool
-        ps = pool.stats
+        ps = {k: int(v) for k, v in pool.stats.items()}
+        cluster_report = {"pool": ps, "active": int(pool.size),
+                          "spare": int(pool.spares),
+                          "losses": [[int(b), int(s), why]
+                                     for b, s, why in sched.losses],
+                          "speculation": None, "recorded": None}
+        if args.speculate or args.replicate > 1:
+            by_reason = {}
+            for _, _, why in sched.speculations:
+                by_reason[why] = by_reason.get(why, 0) + 1
+            cluster_report["speculation"] = {
+                "launches": len(sched.speculations),
+                "by_reason": by_reason,
+                "requeued": ps["shards_requeued"],
+                "backups_leased": ps["backups_leased"],
+                "cancelled": ps["shards_cancelled"],
+                "duplicates_reaped": ps["duplicates_reaped"]}
+        if args.record is not None:
+            backend.recording.save(args.record)
+            cluster_report["recorded"] = {"path": args.record,
+                                          "batches": len(backend.recording)}
+        backend.close()
+    obs_report = None
+    if (args.metrics_out is not None or tracer is not None
+            or flight is not None):
+        obs_report = {"metrics_out": args.metrics_out,
+                      "trace_out": args.trace_out,
+                      "trace_events": (tracer.n_events
+                                       if tracer is not None else None),
+                      "flight_recorder": args.flight_recorder,
+                      "flight_dumps": (list(flight.dumps)
+                                       if flight is not None else [])}
+        if args.metrics_out is not None:
+            registry.save(args.metrics_out)
+        if tracer is not None:
+            tracer.save(args.trace_out)
+    return ServeReport(config=config, code=code_report, requests=requests,
+                       summary=summary, cache=cache_report,
+                       autotune=tune_report, cluster=cluster_report,
+                       observability=obs_report)
+
+
+def _render_report(rep: ServeReport) -> None:
+    """Text renderer: the historical ``[serve] ...`` lines, from the report.
+
+    Pure presentation — every value comes from the :class:`ServeReport`.
+    The per-request lines are diffed byte-for-byte by the CI replay jobs,
+    so their formatting is pinned.
+    """
+    tune, cd = rep.autotune, rep.code
+    cfg = rep.config
+    if tune is not None and tune["restored"]:
+        picks = tune["restored_picks"] or ["(no pick yet)"]
+        print(f"[serve] restored profile state from {tune['restored_from']}: "
+              f"{len(tune['restored_picks'])} warm pick(s) "
+              f"[{', '.join(picks)}] — cold-start window skipped")
+    if cd["fleet"] is not None:
+        print(f"[serve] fleet restricted to the first {cd['fleet']} of "
+              f"{cd['fleet_of']} shards")
+    tune_s = (f" autotune(target={cfg['target_error']:g}, "
+              f"window={cfg['profile_window']}, "
+              f"space={tune['space']})" if tune is not None else "")
+    extra = ""
+    if cd["backend"] == "cluster":
+        extra = (f" workers={cfg['workers']} spares={cfg['spares']} "
+                 f"chaos={cfg['chaos'] or 'none'} compute={cfg['compute']} "
+                 f"transport={cfg['transport']} (deadlines are wall-clock "
+                 "seconds)")
+    print(f"[serve] code={cd['name']} K={cd['K']} N={cd['N']} "
+          f"R={cd['R']} first={cd['first']} "
+          f"straggler_frac={cd['straggler_frac']} decoder={cd['decoder']} "
+          f"backend={cd['backend']} batch={cd['batch']}{tune_s}{extra}")
+    for req in rep.requests:
+        line = " | ".join(
+            f"t={a['t']:.1f}: m={a['m']:2d} " +
+            (f"err={a['rel_err']:.2e}" if a["rel_err"] is not None
+             else "no-estimate")
+            for a in req["answers"] if a["kind"] == "deadline")
+        print(f"[serve] req {req['req_id']}: {line}")
+    s = rep.summary
+    first = (f"; mean time-to-first-answer {s['mean_ttfa']:.3f}"
+             if s["mean_ttfa"] is not None else "")
+    print(f"[serve] {s['requests']} requests in {s['wall_s']:.2f}s "
+          f"({s['rps']:.1f} req/s){first}")
+    for row in s["deadlines"]:
+        print(f"[serve] deadline {row['deadline']:.1f}: mean rel err "
+              f"{row['mean_err']:.3e} over {row['answers']} answers")
+    if rep.cache is not None:
+        st = rep.cache
+        print(f"[serve] decode-weight cache: {st['hits']} hits / "
+              f"{st['misses']} misses (hit rate {st['hit_rate']:.0%}, "
+              f"size {st['size']})")
+        for cst in st["classes"]:
+            budget = (f"budget {cst['budget']}" if cst["budget"] is not None
+                      else "shared")
+            size = f", size {cst['size']}" if "size" in cst else ""
+            print(f"[serve]   class {cst['label']}: {cst['hits']} hits / "
+                  f"{cst['misses']} misses (hit rate {cst['hit_rate']:.0%}, "
+                  f"{budget}{size})")
+    if tune is not None:
+        dl_min = min(cfg["deadlines"])
+        for ev in tune["retunes"]:
+            mark = "switch ->" if ev["switched"] else "keep"
+            cls = f" [{ev['cls']}]" if ev["cls"] is not None else ""
+            trig = f", {ev['trigger']}" if ev["trigger"] != "window" else ""
+            print(f"[serve] retune @{ev['n_seen']} req{cls} "
+                  f"({ev['profile_kind']} profile, ks={ev['ks']:.3f}"
+                  f"{trig}): {mark} {ev['pick']} "
+                  f"(E[err@{dl_min:g}]={ev['err_at_deadline']:.2e},"
+                  f" tta={ev['tta']:.2f}, cost={ev['cost']})")
+        if tune["no_retune"] == "restored":
+            print("[serve] autotune: no retune fired this run "
+                  "(restored picks stayed; drift never triggered)")
+        elif tune["no_retune"] == "window":
+            print(f"[serve] autotune: window {cfg['profile_window']} "
+                  f"never filled ({cfg['requests']} requests) — no "
+                  "retune ran")
+        if tune["state_saved"] is not None:
+            print(f"[serve] saved profile state to {tune['state_saved']} "
+                  f"({tune['classes_saved']} class(es))")
+    if rep.cluster is not None:
+        cl, ps = rep.cluster, rep.cluster["pool"]
         print(f"[serve] cluster pool: {ps['spawned']} spawned, "
               f"{ps['acquired']} acquired, {ps['released']} released, "
               f"{ps['replaced']} replaced ({ps['crashed']} crashed, "
-              f"{ps['retired']} retired); {pool.size} active + "
-              f"{pool.spares} spare at exit")
+              f"{ps['retired']} retired); {cl['active']} active + "
+              f"{cl['spare']} spare at exit")
         # shard-outcome tallies print unconditionally: cancellations and
         # reaped duplicates happen outside --speculate too (crash promotes
         # a racing copy, replication), and audits shouldn't need a rerun
@@ -654,40 +838,54 @@ def main(argv=None):
               f"{ps['shards_cancelled']} cancelled, "
               f"{ps['duplicates_reaped']} duplicate(s) reaped, "
               f"{ps['shards_requeued']} re-queued")
-        if sched.losses:
+        if cl["losses"]:
             lost = ", ".join(f"batch {b} shard {s} ({why})"
-                             for b, s, why in sched.losses)
+                             for b, s, why in cl["losses"])
             print(f"[serve] lost shards: {lost}")
-        if args.speculate or args.replicate > 1:
-            by_reason = {}
-            for _, _, why in sched.speculations:
-                by_reason[why] = by_reason.get(why, 0) + 1
+        if cl["speculation"] is not None:
+            sp = cl["speculation"]
             detail = ", ".join(f"{n} {why}" for why, n
-                               in sorted(by_reason.items())) or "none"
-            print(f"[serve] re-dispatch: {len(sched.speculations)} "
+                               in sorted(sp["by_reason"].items())) or "none"
+            print(f"[serve] re-dispatch: {sp['launches']} "
                   f"speculative launch(es) ({detail}); "
-                  f"{ps['shards_requeued']} re-queued, "
-                  f"{ps['backups_leased']} backup(s) leased")
-            print(f"[serve] cancelled: {ps['shards_cancelled']} first-wins "
-                  f"loser(s), {ps['duplicates_reaped']} duplicate "
+                  f"{sp['requeued']} re-queued, "
+                  f"{sp['backups_leased']} backup(s) leased")
+            print(f"[serve] cancelled: {sp['cancelled']} first-wins "
+                  f"loser(s), {sp['duplicates_reaped']} duplicate "
                   f"result(s) reaped")
-        if args.record is not None:
-            backend.recording.save(args.record)
-            print(f"[serve] recorded {len(backend.recording)} batch "
-                  f"trace(s) to {args.record}")
-        backend.close()
-    if args.metrics_out is not None:
-        registry.save(args.metrics_out)
-        print(f"[serve] metrics snapshot saved to {args.metrics_out}")
-    if tracer is not None:
-        tracer.save(args.trace_out)
-        print(f"[serve] trace: {tracer.n_events} event(s) written to "
-              f"{args.trace_out} (open in Perfetto or chrome://tracing)")
-    if flight is not None:
-        for path in flight.dumps:
-            print(f"[serve] flight recorder dumped to {path}")
-        if not flight.dumps:
-            print("[serve] flight recorder armed; no abort, nothing dumped")
+        if cl["recorded"] is not None:
+            print(f"[serve] recorded {cl['recorded']['batches']} batch "
+                  f"trace(s) to {cl['recorded']['path']}")
+    if rep.observability is not None:
+        ob = rep.observability
+        if ob["metrics_out"] is not None:
+            print(f"[serve] metrics snapshot saved to {ob['metrics_out']}")
+        if ob["trace_out"] is not None:
+            print(f"[serve] trace: {ob['trace_events']} event(s) written to "
+                  f"{ob['trace_out']} (open in Perfetto or "
+                  "chrome://tracing)")
+        if ob["flight_recorder"] is not None:
+            for path in ob["flight_dumps"]:
+                print(f"[serve] flight recorder dumped to {path}")
+            if not ob["flight_dumps"]:
+                print("[serve] flight recorder armed; no abort, nothing "
+                      "dumped")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    problems = _collect_problems(args)
+    if problems:
+        raise SystemExit("[serve] invalid arguments:\n  " +
+                         "\n  ".join(problems))
+    if not args.json:
+        deadlines = tuple(float(x) for x in args.deadlines.split(","))
+        print(f"[serve] config {_effective_config(args, deadlines)}")
+    report = run_serve(args)
+    if args.json:
+        print(report.to_json())
+    else:
+        _render_report(report)
 
 
 if __name__ == "__main__":

@@ -19,24 +19,37 @@ reports in — served incrementally:
   ``compute_products``/``draw_latencies`` hooks and inherit a
   :class:`SyntheticDispatch` adapter; the cluster backend streams measured
   completions from real processes through the same surface.
+* :mod:`~repro.serving.loadgen` — open-loop multi-tenant load generation:
+  :class:`TenantSpec` request classes with accuracy/latency SLOs, Poisson /
+  bursty-MMPP / replayed-trace arrival processes, and
+  :func:`summarize_load` per-tenant p99 time-to-target / goodput reports
+  over :meth:`MasterScheduler.run_open`.
 
 ``launch/serve.py`` and ``examples/coded_matmul_service.py`` are thin CLIs
 over this package; ``benchmarks/serve_throughput.py`` measures it against
-the per-deadline-recompute baseline.
+the per-deadline-recompute baseline and ``benchmarks/load_slo.py`` drives
+the open-loop harness at a fixed offered load.
 """
 from .backends import (BACKEND_NAMES, DeviceBackend, ExecutionBackend,
                        SimulatedBackend, SyntheticDispatch, make_backend)
 from .cache import DecodeWeightCache
 from .incremental import IncrementalDecoder, RecomputeDecoder, make_decoder
-from .master import (Answer, AsyncMasterScheduler, MasterScheduler,
-                     MatmulRequest, RequestResult, ServeConfig,
-                     merged_event_stream, serve_request)
+from .loadgen import (ARRIVAL_PROCESSES, LoadReport, OpenRequest, TenantSpec,
+                      build_workload, bursty_arrivals, make_arrivals,
+                      poisson_arrivals, run_load, summarize_load,
+                      trace_arrivals)
+from .master import (QUEUE_POLICIES, Answer, MasterScheduler, MatmulRequest,
+                     RequestResult, ServeConfig, merged_event_stream,
+                     serve_request)
 
 __all__ = [
     "ExecutionBackend", "SyntheticDispatch", "SimulatedBackend",
     "DeviceBackend", "make_backend",
     "BACKEND_NAMES", "DecodeWeightCache", "IncrementalDecoder",
     "RecomputeDecoder", "make_decoder", "MasterScheduler",
-    "AsyncMasterScheduler", "MatmulRequest", "ServeConfig", "Answer",
+    "MatmulRequest", "ServeConfig", "Answer",
     "RequestResult", "serve_request", "merged_event_stream",
+    "QUEUE_POLICIES", "ARRIVAL_PROCESSES", "TenantSpec", "OpenRequest",
+    "LoadReport", "build_workload", "make_arrivals", "poisson_arrivals",
+    "bursty_arrivals", "trace_arrivals", "run_load", "summarize_load",
 ]

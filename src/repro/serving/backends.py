@@ -35,6 +35,7 @@ import numpy as np
 
 from ..cluster.events import ShardEvent
 from ..core.codes.base import CDCCode
+from ..names import unknown_name
 from ..core.partition import split_contraction
 from ..core.straggler import (sample_times, shifted_exp_times,
                               validate_latency_kw)
@@ -107,10 +108,13 @@ class ExecutionBackend:
     row per dispatched batch) — and inherit ``dispatch_batch``, which wraps
     them in a :class:`SyntheticDispatch`.  Live backends (the cluster)
     override ``dispatch_batch`` wholesale and ignore ``rng``: their
-    completion events are measured, not drawn.
+    completion events are measured, not drawn; they set ``live = True`` so
+    open-loop serving knows to pace arrivals on the wall clock instead of
+    the virtual event clock.
     """
 
     name = "abstract"
+    live = False                   # wall-clocked event stream?
 
     # ------------------------------------------------------ unified contract
     def dispatch_batch(self, code: CDCCode, As, Bs,
@@ -294,10 +298,10 @@ def make_backend(name: str, **kw) -> ExecutionBackend:
     """Backend factory for the serving CLIs.
 
     ``sim`` | ``device`` | ``cluster`` | ``replay`` — an unknown name is
-    rejected with the valid list (same convention as ``run.py --only``).
+    rejected with the valid list (the :func:`repro.names.unknown_name`
+    idiom shared by every string-spec parse surface).
     """
     build = _BACKENDS.get(name)
     if build is None:
-        raise ValueError(f"unknown backend {name!r}; valid backends: "
-                         f"{', '.join(BACKEND_NAMES)}")
+        raise unknown_name("backend", name, BACKEND_NAMES)
     return build(**kw)

@@ -32,6 +32,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.codes.base import CDCCode, DecodeInfo
+from ..names import unknown_name
 from .cache import DecodeWeightCache
 
 __all__ = ["IncrementalDecoder", "RecomputeDecoder", "make_decoder"]
@@ -280,4 +281,4 @@ def make_decoder(kind: str, code: CDCCode, **kw):
     if kind == "recompute":
         kw.pop("cache", None)            # the baseline never caches
         return RecomputeDecoder(code, **kw)
-    raise ValueError(f"unknown decoder kind {kind!r}")
+    raise unknown_name("decoder kind", kind, ("incremental", "recompute"))

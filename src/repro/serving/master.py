@@ -30,7 +30,19 @@ unlikely to finish before the deadline relative to the marginal value of
 its resolution layer — re-dispatches the shard to a warm spare.  First
 completion wins; duplicates are cancelled and counted separately from
 losses; crashed workers' shards are re-queued by the dispatch instead of
-abandoned.  :class:`AsyncMasterScheduler` survives as a back-compat alias.
+abandoned.
+
+Open-loop serving (:meth:`MasterScheduler.run_open`): timestamped arrivals
+(:mod:`repro.serving.loadgen` workloads) interleave with completions on the
+merged event stream — requests are admitted at their arrival instants
+*during* in-flight batches, shed when the bounded queue overflows
+(``queue_limit``), batched earliest-deadline-first (``queue_policy="edf"``)
+within shape-compatible classes, and released early once every member hit
+its accuracy SLO (``target``) — the paper's anytime estimates turned into
+goodput under overload.  Tie rule extending the stream contract: at equal
+timestamps, completions (and the dispatches they trigger) precede
+arrivals.  With an unbounded FIFO queue and no per-request SLOs the open
+loop reduces bit-identically to :meth:`MasterScheduler.run`.
 """
 from __future__ import annotations
 
@@ -43,12 +55,15 @@ import numpy as np
 from ..core.codes.base import CDCCode
 from ..obs import NULL_FLIGHT, NULL_REGISTRY, NULL_TRACER
 from .backends import ExecutionBackend, SimulatedBackend
+from ..names import unknown_name
 from .cache import DecodeWeightCache
 from .incremental import make_decoder
 
 __all__ = ["ServeConfig", "MatmulRequest", "Answer", "RequestResult",
-           "MasterScheduler", "AsyncMasterScheduler", "serve_request",
-           "merged_event_stream"]
+           "MasterScheduler", "serve_request", "merged_event_stream",
+           "QUEUE_POLICIES"]
+
+QUEUE_POLICIES = ("fifo", "edf")
 
 
 def merged_event_stream(t_sorted, deadlines) -> list[tuple[float, int, int]]:
@@ -77,6 +92,12 @@ class ServeConfig:
     decoder: str = "incremental"  # "incremental" | "recompute" (baseline)
     track_errors: bool = True     # compute C=A@B and report relative errors
     seed: int = 0
+    # admission control + queue policy (the open-loop serving knobs; the
+    # defaults are exactly the historical closed-loop behavior)
+    queue_limit: int | None = None   # bounded queue: submit() sheds beyond
+    queue_policy: str = "fifo"       # "fifo" | "edf" (see QUEUE_POLICIES)
+    shed_expired: bool = False       # drop requests already past deadline
+    #                                  at dequeue instead of dispatching them
 
 
 @dataclass
@@ -84,6 +105,12 @@ class MatmulRequest:
     req_id: int
     A: np.ndarray
     B: np.ndarray
+    # open-loop metadata (all optional; closed-loop submits leave defaults)
+    tenant: str | None = None     # multi-tenant label for SLO accounting
+    arrival: float = 0.0          # arrival instant on the global serve clock
+    deadline: float | None = None  # absolute latency-SLO instant
+    target: float | None = None   # accuracy SLO: stop refining at this
+    #                               relative error (requires track_errors)
 
 
 @dataclass
@@ -105,6 +132,23 @@ class RequestResult:
     ttfa: float | None = None     # time of the first available estimate
     t_exact: float | None = None  # time the estimate became exact
     decode_stats: dict = field(default_factory=dict)
+    # open-loop bookkeeping on the *global* serve clock (``answers`` times
+    # stay relative to the batch dispatch, as in closed-loop serving)
+    tenant: str | None = None
+    arrival: float = 0.0
+    t_dispatch: float | None = None  # instant the batch left the queue
+    t_target: float | None = None    # instant the accuracy SLO was met
+    t_done: float | None = None      # instant the batch released (or the
+    #                                  request was dropped at dequeue)
+    slo_ok: bool | None = None       # target met within the deadline
+    dropped: str | None = None       # "expired": dequeued past deadline
+
+    @property
+    def tta(self) -> float | None:
+        """Time-to-target-accuracy from arrival (``None``: never reached)."""
+        if self.t_target is None:
+            return None
+        return self.t_target - self.arrival
 
 
 _DEFAULT_CACHE = object()        # sentinel: "give me the default LRU";
@@ -151,9 +195,18 @@ class MasterScheduler:
         self._h_tick = self.metrics.histogram("serve.decode_tick_seconds")
         self._h_ttfa = self.metrics.histogram("serve.tta_first_seconds")
         self._h_tta = self.metrics.histogram("serve.tta_exact_seconds")
+        self._h_depth = self.metrics.histogram("serve.queue_depth_sampled")
+        self._c_shed = self.metrics.counter("serve.shed")
         if self.config.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.config.batch_size}")
+        if self.config.queue_policy not in QUEUE_POLICIES:
+            raise unknown_name("queue policy", self.config.queue_policy,
+                               QUEUE_POLICIES)
+        if self.config.queue_limit is not None \
+                and self.config.queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1 (or None), got "
+                             f"{self.config.queue_limit}")
         self.rng = np.random.default_rng(self.config.seed)
         self._queue: deque[MatmulRequest] = deque()
         self._next_id = 0
@@ -164,6 +217,11 @@ class MasterScheduler:
         self.losses: list[tuple[int, int, str]] = []   # (batch#, shard, why)
         self.speculations: list[tuple[int, int, str]] = []   # re-dispatches
         self._batches_served = 0
+        # open-loop admission bookkeeping: shed decisions and the queue-depth
+        # time series ((t, depth) samples at every admission/dispatch on the
+        # global serve clock — the registry's histogram mirrors the depths)
+        self.shed: list[tuple[str, float]] = []        # (tenant, arrival)
+        self.depth_series: list[tuple[float, int]] = []
         # hedge-trigger observation window: recent per-batch completion rows
         # feed a small straggler fit so the speculation policy has a
         # P(finish-by-deadline) estimate after the first served batch
@@ -171,12 +229,27 @@ class MasterScheduler:
         self._hedge_fit: tuple[int, object] | None = None
 
     # --------------------------------------------------------------- intake
-    def submit(self, A: np.ndarray, B: np.ndarray) -> int:
+    def submit(self, A: np.ndarray, B: np.ndarray, *,
+               tenant: str | None = None, deadline: float | None = None,
+               arrival: float = 0.0,
+               target: float | None = None) -> int | None:
         """Queue one job, validating its shape before accepting it.
 
         Mixed shapes are fine across the queue — batches group same-shape
         runs — but a malformed job must fail here, not deep inside a later
         batch encode.
+
+        The keyword surface is the open-loop intake: ``tenant`` labels the
+        request for per-tenant SLO accounting, ``arrival`` stamps it on the
+        global serve clock, ``deadline`` is the *absolute* latency-SLO
+        instant (arrival + the tenant's SLO window), and ``target`` is the
+        accuracy SLO (relative error at which refinement may stop).  The
+        old positional ``submit(A, B)`` surface is unchanged.
+
+        Admission control: with ``config.queue_limit`` set, a submit
+        against a full queue is *shed* — recorded in :attr:`shed`, counted
+        in the obs registry (``serve.shed`` plus a per-tenant counter), and
+        ``None`` is returned instead of a request id.
         """
         A = np.asarray(A)
         B = np.asarray(B)
@@ -187,10 +260,24 @@ class MasterScheduler:
             raise ValueError(f"inner dim {A.shape[1]} must be divisible by "
                              f"K={self.code.K} (the contraction splits into "
                              "K blocks)")
+        limit = self.config.queue_limit
+        if limit is not None and len(self._queue) >= limit:
+            label = tenant if tenant is not None else "default"
+            self.shed.append((label, float(arrival)))
+            self._c_shed.inc()
+            self.metrics.counter(f"serve.shed.{label}").inc()
+            self.flight.record("shed", tenant=label, arrival=float(arrival),
+                               depth=len(self._queue))
+            return None
         req_id = self._next_id
         self._next_id += 1
-        self._queue.append(MatmulRequest(req_id, A, B))
+        self._queue.append(MatmulRequest(
+            req_id, A, B, tenant=tenant, arrival=float(arrival),
+            deadline=None if deadline is None else float(deadline),
+            target=None if target is None else float(target)))
         self._g_queue.set(len(self._queue))
+        self._h_depth.observe(float(len(self._queue)))
+        self.depth_series.append((float(arrival), len(self._queue)))
         return req_id
 
     @property
@@ -260,6 +347,50 @@ class MasterScheduler:
                 "answered (raise the fleet or switch codes first)")
         self.fleet = N
 
+    # -------------------------------------------------------- queue policy
+    @staticmethod
+    def _edf_key(r: MatmulRequest):
+        """EDF order: earliest absolute deadline first; deadline-less
+        requests sort last; ties break by arrival then submission order."""
+        return (r.deadline if r.deadline is not None else np.inf,
+                r.arrival, r.req_id)
+
+    def _next_batch(self) -> list[MatmulRequest]:
+        """Pop the next batch per ``config.queue_policy``.
+
+        ``fifo`` — the historical rule: the head of the queue plus the
+        same-shape *prefix run* behind it (stops at the first shape
+        mismatch), so closed-loop serving is bit-identical to every run
+        before queue policies existed.
+
+        ``edf`` — deadline-aware: the queued request with the earliest
+        absolute deadline anchors the batch, then the rest of the queue is
+        scanned in EDF order for class-compatible (same-shape) requests to
+        fill it.  Batches still stack into one encode + one dispatch, so
+        compatibility stays a hard constraint, not a preference.
+        """
+        if self.config.queue_policy == "edf":
+            first = min(self._queue, key=self._edf_key)
+            shape = (first.A.shape, first.B.shape)
+            batch = [first]
+            for r in sorted(self._queue, key=self._edf_key):
+                if len(batch) >= self.config.batch_size:
+                    break
+                if r is not first and (r.A.shape, r.B.shape) == shape:
+                    batch.append(r)
+            taken = {id(r) for r in batch}
+            self._queue = deque(r for r in self._queue
+                                if id(r) not in taken)
+            return batch
+        head = self._queue[0]
+        shape = (head.A.shape, head.B.shape)
+        batch = [self._queue.popleft()]
+        while (self._queue and len(batch) < self.config.batch_size
+               and (self._queue[0].A.shape,
+                    self._queue[0].B.shape) == shape):
+            batch.append(self._queue.popleft())
+        return batch
+
     # ----------------------------------------------------------- event loop
     def run(self) -> list[RequestResult]:
         """Serve everything queued; returns results in submission order.
@@ -270,13 +401,7 @@ class MasterScheduler:
         results: list[RequestResult] = []
         per_class = getattr(self.policy, "per_class", False)
         while self._queue:
-            head = self._queue[0]
-            shape = (head.A.shape, head.B.shape)
-            batch = [self._queue.popleft()]
-            while (self._queue and len(batch) < self.config.batch_size
-                   and (self._queue[0].A.shape,
-                        self._queue[0].B.shape) == shape):
-                batch.append(self._queue.popleft())
+            batch = self._next_batch()
             self._g_queue.set(len(self._queue))
             cls = self._class_of(batch[0]) \
                 if (self.policy is not None and per_class) else None
@@ -287,7 +412,143 @@ class MasterScheduler:
                     else self.policy.maybe_retune()
                 if new_code is not None:
                     self.set_code(new_code, cls=cls)
-        return results
+        return sorted(results, key=lambda r: r.req_id)
+
+    def run_open(self, workload, *, realtime: bool | None = None
+                 ) -> list[RequestResult]:
+        """Open-loop serving: timestamped arrivals against a busy fleet.
+
+        ``workload`` is an iterable of arrival records — anything with
+        ``.arrival``, ``.A``, ``.B`` and an optional ``.tenant`` (a
+        :class:`~repro.serving.loadgen.TenantSpec`-shaped object carrying
+        ``name`` / ``deadline`` / ``target_error``, a bare string label, or
+        ``None``) — typically :func:`repro.serving.loadgen.build_workload`
+        output.  Unlike :meth:`run`, the load does *not* wait for the
+        fleet: requests arrive at their own instants, are admitted (or
+        shed) against the bounded queue mid-flight, interleaved with
+        completions on the merged event stream, and the next batch is
+        formed only when the fleet frees up — the open-loop regime where
+        queueing collapse is visible.
+
+        Clock: on modeled backends arrivals and completions share one
+        *virtual* clock (the dispatch's synthetic event times offset by the
+        batch's dispatch instant), so runs are deterministic and cost no
+        wall time; on a live backend (``backend.live``) the global clock is
+        wall seconds from the first arrival.  ``realtime=None`` picks
+        automatically.
+
+        Tie rule, extending the ``merged_event_stream`` contract: at equal
+        timestamps completions are ingested first, then the dispatches
+        they trigger, then arrivals — the queue state an arrival is
+        admitted against reflects everything that happened by its instant.
+
+        Per-request SLOs: a request carrying a ``target`` releases its
+        batch early once *every* member hit its target (or became exact),
+        with ``serve.slo_hit/miss.<tenant>`` counters and
+        :attr:`RequestResult.t_target` stamped on the global clock.  With
+        ``config.shed_expired``, requests already past their deadline at
+        dequeue are dropped undispatched.  A workload with no tenants, an
+        unbounded FIFO queue, and all arrivals at 0 reduces bit-identically
+        to :meth:`run`.
+
+        Returns served (and dropped-at-dequeue) results in admission
+        order; shed arrivals appear only in :attr:`shed`.
+        """
+        reqs = sorted(workload, key=lambda r: float(r.arrival))
+        if any(getattr(self._tenant_of(r), "target_error", None) is not None
+               for r in reqs) and not self.config.track_errors:
+            raise ValueError("open-loop accuracy SLOs (tenant target_error) "
+                             "require config.track_errors=True")
+        if realtime is None:
+            realtime = bool(getattr(self.backend, "live", False))
+        feed = _ArrivalFeed(self, reqs)
+        results: list[RequestResult] = []
+        per_class = getattr(self.policy, "per_class", False)
+        t_now = 0.0
+        t0_wall = time.monotonic() if realtime else None
+        while feed.more or self._queue:
+            if not self._queue:
+                # idle fleet: jump (or sleep) to the next arrival
+                if realtime:
+                    delay = feed.next_time - (time.monotonic() - t0_wall)
+                    if delay > 0:
+                        time.sleep(delay)
+                    t_now = time.monotonic() - t0_wall
+                else:
+                    t_now = max(t_now, feed.next_time)
+                feed.admit_until(t_now)
+                continue
+            # dispatch instant: strictly-earlier arrivals are already in
+            # (admitted during the previous batch's event walk); pull the
+            # batch first, then admit arrivals tied with this instant —
+            # completions and their dispatches precede arrivals at equal t
+            if self.config.shed_expired:
+                results.extend(self._drop_expired(t_now))
+            if not self._queue:
+                continue
+            batch = self._next_batch()
+            self._g_queue.set(len(self._queue))
+            self.depth_series.append((t_now, len(self._queue)))
+            feed.admit_until(t_now)
+            cls = self._class_of(batch[0]) \
+                if (self.policy is not None and per_class) else None
+            ctx = _OpenContext(feed, t_now, realtime)
+            results.extend(self._serve_batch(batch, cls, open_ctx=ctx))
+            self._served += len(batch)
+            t_now = ctx.t_release
+            if self.policy is not None:
+                new_code = self.policy.maybe_retune(cls) if per_class \
+                    else self.policy.maybe_retune()
+                if new_code is not None:
+                    self.set_code(new_code, cls=cls)
+        return sorted(results, key=lambda r: r.req_id)
+
+    @staticmethod
+    def _tenant_of(r):
+        """The tenant object (or label, or None) riding an arrival record."""
+        return getattr(r, "tenant", None)
+
+    def _admit_open(self, r) -> int | None:
+        """Admit one arrival record through the keyword submit surface."""
+        ten = self._tenant_of(r)
+        name = getattr(ten, "name", ten)   # TenantSpec | str | None
+        window = getattr(ten, "deadline", None)
+        target = getattr(ten, "target_error", None)
+        arrival = float(r.arrival)
+        return self.submit(
+            r.A, r.B, tenant=name, arrival=arrival,
+            deadline=None if window is None else arrival + float(window),
+            target=target)
+
+    def _drop_expired(self, t_now: float) -> list[RequestResult]:
+        """Deadline-aware dequeue shedding (``config.shed_expired``).
+
+        A queued request whose absolute deadline already passed cannot meet
+        its SLO; dispatching it would only delay requests that still can.
+        Dropped requests get an answerless result (``dropped="expired"``)
+        and count as SLO misses.
+        """
+        dropped = []
+        keep = deque()
+        for r in self._queue:
+            if r.deadline is not None and r.deadline < t_now:
+                res = RequestResult(r.req_id, tenant=r.tenant,
+                                    arrival=r.arrival, t_done=t_now,
+                                    slo_ok=False, dropped="expired")
+                self._slo_count(r.tenant, False)
+                self.metrics.counter("serve.dropped_expired").inc()
+                dropped.append(res)
+            else:
+                keep.append(r)
+        if dropped:
+            self._queue = keep
+            self._g_queue.set(len(self._queue))
+        return dropped
+
+    def _slo_count(self, tenant: str | None, hit: bool) -> None:
+        label = tenant if tenant is not None else "default"
+        kind = "slo_hit" if hit else "slo_miss"
+        self.metrics.counter(f"serve.{kind}.{label}").inc()
 
     def _fleet_for(self, code: CDCCode) -> int:
         """Shards actually dispatched for a batch served under ``code``.
@@ -350,8 +611,32 @@ class MasterScheduler:
             if code.recovery_threshold <= min(Nf, len(t_sorted)) else None
         return first_t, exact_t
 
+    def _open_track(self, batch, decoders, refs, results, m: int, R: int,
+                    t_glob: float) -> None:
+        """Stamp ``t_target`` for requests whose accuracy SLO was just met."""
+        for r, dec, (C, norm, _), res in zip(batch, decoders, refs, results):
+            if r.target is None or res.t_target is not None:
+                continue
+            if m >= R:                     # exact: every target is met
+                res.t_target = t_glob
+                continue
+            est = dec.estimate()
+            if est is None or C is None or norm <= 0.0:
+                continue
+            err = float(np.linalg.norm(est - C) ** 2 / norm)
+            if err <= r.target:
+                res.t_target = t_glob
+
+    @staticmethod
+    def _open_settled(batch, results, m: int, R: int) -> bool:
+        """Early-release rule: every member hit its target (or is exact)."""
+        if m >= R:
+            return True
+        return all(r.target is not None and res.t_target is not None
+                   for r, res in zip(batch, results))
+
     def _serve_batch(self, batch: list[MatmulRequest],
-                     cls=None) -> list[RequestResult]:
+                     cls=None, open_ctx=None) -> list[RequestResult]:
         """THE event loop: every backend serves through this one code path.
 
         The backend's ``dispatch_batch`` handle yields ``done`` / ``lost``
@@ -365,6 +650,13 @@ class MasterScheduler:
         synthetic clock never blocks, so the loop degenerates to exactly the
         legacy merged-stream walk (bit-identical, pinned by the replay
         tests); on the cluster it is live and wall-clocked.
+
+        ``open_ctx`` (open-loop serving only) threads the arrival feed and
+        the batch's dispatch instant through the walk: arrivals strictly
+        earlier than an event are admitted before it is ingested, tied
+        arrivals after (completion-before-arrival), and — when any member
+        carries an accuracy SLO — the batch releases early once every
+        member hit its target, cancelling the remaining shard work.
         """
         code, cfg = self._code_for(cls), self.config
         Nf = self._fleet_for(code)
@@ -372,6 +664,14 @@ class MasterScheduler:
         # starts the wall clock: the C = A@B error baselines are master-side
         # bookkeeping and must not inflate the measured completion times
         refs, decoders, results = self._prepare_batch(batch, code, cfg)
+        t_start = open_ctx.t_start if open_ctx is not None else 0.0
+        slo_active = open_ctx is not None \
+            and any(r.target is not None for r in batch)
+        if open_ctx is not None:
+            for r, res in zip(batch, results):
+                res.tenant = r.tenant
+                res.arrival = r.arrival
+                res.t_dispatch = t_start
         dispatch = self.backend.dispatch_batch(
             code, [r.A for r in batch], [r.B for r in batch],
             n_shards=Nf if Nf != code.N else None, rng=self.rng)
@@ -384,7 +684,14 @@ class MasterScheduler:
                            requests=len(batch))
         deadlines = sorted(float(d) for d in cfg.deadlines)
         grace = float(getattr(self.backend, "grace", 2.0))
-        dispatch.set_abandon((deadlines[-1] if deadlines else 0.0) + grace)
+        bound = deadlines[-1] if deadlines else 0.0
+        if open_ctx is not None:
+            # open loop: the hang bound must cover the batch's own latency
+            # SLOs, which live on the global clock, not the tick schedule
+            rels = [r.deadline - t_start for r in batch
+                    if r.deadline is not None]
+            bound = max([bound] + rels)
+        dispatch.set_abandon(bound + grace)
         # hedging is live only when both sides opt in: a policy on the
         # scheduler AND a dispatch that can actually re-dispatch mid-batch
         poll = float(self.speculation.poll) \
@@ -417,14 +724,29 @@ class MasterScheduler:
                     # cap the wait so hedge triggers are not delayed until
                     # the next deadline tick
                     timeout = poll if timeout is None else min(timeout, poll)
+                if open_ctx is not None and open_ctx.realtime \
+                        and open_ctx.feed.more:
+                    # live open loop: wake at the next arrival so admission
+                    # (and shed) decisions land near their true instants
+                    wait = max(open_ctx.feed.next_time - t_start
+                               - dispatch.elapsed(), 0.0) + 1e-3
+                    timeout = wait if timeout is None \
+                        else min(timeout, wait)
                 ev = dispatch.next_event(timeout=timeout)
                 if ev is None:
                     # deadline reached or spurious wake — a natural point to
                     # reconsider hedging the still-pending shards
+                    if open_ctx is not None:
+                        open_ctx.feed.admit_until(
+                            t_start + dispatch.elapsed())
                     if poll is not None:
                         self._maybe_speculate(dispatch, code, m, shard_times,
                                               deadlines)
                     continue
+                if open_ctx is not None:
+                    # arrivals strictly earlier than this event are admitted
+                    # before it is ingested (ties wait: completion first)
+                    open_ctx.feed.admit_until(t_start + ev.t, strict=True)
                 # stream-contract tie rule: a tick fires after any
                 # completion sharing its timestamp, so strictly-earlier
                 # ticks flush before this event is ingested
@@ -472,10 +794,30 @@ class MasterScheduler:
                     self.flight.record("lost", batch=bid, shard=ev.shard,
                                        worker=ev.worker, t=ev.t,
                                        reason=ev.reason)
+                if open_ctx is not None:
+                    t_glob = t_start + ev.t
+                    if slo_active and ev.kind == "done":
+                        self._open_track(batch, decoders, refs, results,
+                                         m, R, t_glob)
+                    settled = slo_active and self._open_settled(
+                        batch, results, m, R)
+                    if not settled and dispatch.outstanding:
+                        # tied arrivals admit after the completion they
+                        # share a timestamp with (completion-before-arrival)
+                        open_ctx.feed.admit_until(t_glob)
+                    if settled:
+                        # every member hit its accuracy SLO: release the
+                        # fleet now, cancelling the outstanding shard work.
+                        # Ties at this instant stay with the feed — the
+                        # run_open loop admits them after the dispatch this
+                        # release triggers (which may free a queue slot)
+                        break
                 if poll is not None:
                     self._maybe_speculate(dispatch, code, m, shard_times,
                                           deadlines)
         finally:
+            if open_ctx is not None:
+                open_ctx.t_release = t_start + dispatch.elapsed()
             dispatch.finalize()
         t_sorted = np.sort(np.fromiter(shard_times.values(), np.float64,
                                        count=len(shard_times)))
@@ -483,6 +825,14 @@ class MasterScheduler:
         for res in results:
             res.ttfa = first_t
             res.t_exact = exact_t
+        if open_ctx is not None:
+            for r, res in zip(batch, results):
+                res.t_done = open_ctx.t_release
+                if r.target is not None:
+                    hit = res.t_target is not None and (
+                        r.deadline is None or res.t_target <= r.deadline)
+                    res.slo_ok = hit
+                    self._slo_count(r.tenant, hit)
         if self._m_on:
             for _ in results:              # TTA series is per *request*
                 if first_t is not None:
@@ -580,18 +930,54 @@ class MasterScheduler:
             self.tracer.milestone(bid, "deadline-tick", t, m=m)
 
 
-class AsyncMasterScheduler(MasterScheduler):
-    """Back-compat alias: the unified event loop absorbed the async path.
+class _ArrivalFeed:
+    """Cursor over time-sorted arrivals, admitting them as the clock moves.
 
-    Historically this subclass owned the live-stream serving loop while
-    :class:`MasterScheduler` drove the two-call simulated protocol.  Every
-    backend now exposes the event-stream ``dispatch_batch`` contract
-    (modeled ones through :class:`~repro.serving.backends
-    .SyntheticDispatch`), so the one loop in
-    :meth:`MasterScheduler._serve_batch` serves them all and this class
-    adds nothing.  Kept so existing cluster call sites (and recorded
-    invocations in docs/scripts) keep working unchanged.
+    ``admit_until(t)`` pushes every arrival with instant ≤ t (strictly < t
+    with ``strict=True`` — the pre-ingest half of the completion-before-
+    arrival tie rule) through the scheduler's keyword submit surface, where
+    admission control sheds against the bounded queue.
     """
+
+    __slots__ = ("sched", "reqs", "i")
+
+    def __init__(self, sched: MasterScheduler, reqs: list):
+        self.sched = sched
+        self.reqs = reqs
+        self.i = 0
+
+    @property
+    def more(self) -> bool:
+        return self.i < len(self.reqs)
+
+    @property
+    def next_time(self) -> float:
+        return float(self.reqs[self.i].arrival)
+
+    def admit_until(self, t: float, strict: bool = False) -> None:
+        while self.i < len(self.reqs):
+            ta = float(self.reqs[self.i].arrival)
+            if ta > t or (strict and ta >= t):
+                break
+            self.sched._admit_open(self.reqs[self.i])
+            self.i += 1
+
+
+class _OpenContext:
+    """Per-batch open-loop context: the arrival feed plus clock offsets.
+
+    ``t_start`` anchors the dispatch's relative event times on the global
+    serve clock; ``t_release`` is stamped when the fleet frees up (early
+    release, stream exhaustion, or abandonment).
+    """
+
+    __slots__ = ("feed", "t_start", "realtime", "t_release")
+
+    def __init__(self, feed: _ArrivalFeed, t_start: float, realtime: bool):
+        self.feed = feed
+        self.t_start = t_start
+        self.realtime = realtime
+        self.t_release = t_start
 
 
 def serve_request(code: CDCCode, A, B, rng, *, deadlines,

@@ -21,7 +21,7 @@ from repro.cluster import BatchRecord, ChaosSpec, TraceRecording, WorkerPool
 from repro.cluster.backend import ClusterBackend, ReplayBackend
 from repro.core import GroupSACCode, LayerSACCode, MatDotCode, x_complex
 from repro.design.policy import RequestClass, SpeculationPolicy
-from repro.serving import (AsyncMasterScheduler, DecodeWeightCache,
+from repro.serving import (DecodeWeightCache,
                            MasterScheduler, ServeConfig, SimulatedBackend,
                            make_backend)
 
@@ -67,7 +67,7 @@ def test_chaos_spec_parse():
 
 
 def test_make_backend_rejects_unknown_name_listing_valid():
-    with pytest.raises(ValueError, match="valid backends: .*cluster.*sim"):
+    with pytest.raises(ValueError, match="unknown backend .*valid: .*cluster.*sim"):
         make_backend("gpu")
 
 
@@ -171,7 +171,7 @@ def test_record_replay_bit_identity(make_code):
                       seed=0)
     with ClusterBackend(workers=code.N, chaos="sleep:0.005:0.02", seed=1,
                         record=True) as be:
-        live = _serve(AsyncMasterScheduler(code, be, cfg), reqs)
+        live = _serve(MasterScheduler(code, be, cfg), reqs)
         rec = be.recording
     assert len(rec) == 2                       # one record per dispatch
     replay = _serve(MasterScheduler(code, ReplayBackend(rec), cfg), reqs)
@@ -195,7 +195,7 @@ def test_record_replay_bit_identity_with_lost_shards():
                       seed=0)
     with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
                         seed=6, grace=3.0, record=True) as be:
-        sched = AsyncMasterScheduler(code, be, cfg)
+        sched = MasterScheduler(code, be, cfg)
         live = _serve(sched, reqs)
         rec = be.recording
     assert sched.losses and sched.losses[0][2] == "crash"
@@ -250,7 +250,7 @@ def test_crash_mid_batch_loses_one_shard_and_heals():
     cfg = ServeConfig(deadlines=(1.0,), batch_size=2, seed=0)
     with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
                         seed=2, grace=3.0) as be:
-        sched = AsyncMasterScheduler(code, be, cfg)
+        sched = MasterScheduler(code, be, cfg)
         out = _serve(sched, _reqs(rng, 4))
         stats = be.pool.stats
     assert [(b, s, why) for b, s, why in sched.losses] == [(0, 0, "crash")]
@@ -274,7 +274,7 @@ def test_hang_past_deadline_is_abandoned_and_retired():
     cfg = ServeConfig(deadlines=(0.4,), batch_size=2, seed=0)
     with ClusterBackend(workers=N, chaos="hang:1,sleep:0.005:0.02",
                         seed=4, grace=0.5) as be:
-        sched = AsyncMasterScheduler(code, be, cfg)
+        sched = MasterScheduler(code, be, cfg)
         out = _serve(sched, _reqs(rng, 2))
         stats = be.pool.stats
     assert [(s, why) for _, s, why in sched.losses] == [(0, "timeout")]
@@ -495,7 +495,7 @@ def test_socket_transport_crash_loss_and_replay_bit_identity():
     with ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
                         seed=2, grace=3.0, record=True,
                         transport="socket") as be:
-        sched = AsyncMasterScheduler(code, be, cfg)
+        sched = MasterScheduler(code, be, cfg)
         live = _serve(sched, reqs)
         rec = be.recording
         stats = be.pool.stats
@@ -520,7 +520,7 @@ def test_device_compute_serve_and_replay_bit_identity():
     with ClusterBackend(workers=N, chaos="sleep:0.005:0.02", seed=8,
                         record=True, compute="device",
                         transport="socket") as be:
-        live = _serve(AsyncMasterScheduler(code, be, cfg), reqs)
+        live = _serve(MasterScheduler(code, be, cfg), reqs)
         rec = be.recording
     dev = _serve(MasterScheduler(code, ReplayBackend(rec, compute="device"),
                                  cfg), reqs)
@@ -541,7 +541,7 @@ def test_transport_releases_operands_on_crash_and_teardown():
     be = ClusterBackend(workers=N, chaos="crash:1,sleep:0.005:0.02",
                         seed=2, grace=3.0)
     try:
-        sched = AsyncMasterScheduler(code, be, cfg)
+        sched = MasterScheduler(code, be, cfg)
         _serve(sched, _reqs(rng, 4))
         assert sched.losses                        # the crash really fired
         assert be.pool.transport.live_operands == 0
@@ -553,7 +553,7 @@ def test_transport_releases_operands_on_crash_and_teardown():
 # ---------------------------------------------- async/sim surface equivalence
 
 def test_async_scheduler_falls_back_on_modeled_backends():
-    """AsyncMasterScheduler over a modeled backend (its ``dispatch_batch``
+    """MasterScheduler over a modeled backend (its ``dispatch_batch``
     is the synthetic-event adapter over ``compute_products`` +
     ``draw_latencies``) serves exactly like MasterScheduler — same rng
     stream, same answers: one event loop, no modeled/live fork left."""
@@ -561,7 +561,7 @@ def test_async_scheduler_falls_back_on_modeled_backends():
     rng = np.random.default_rng(9)
     reqs = _reqs(rng, 3)
     cfg = ServeConfig(deadlines=(1.2, 2.0), batch_size=2, seed=7)
-    a = _serve(AsyncMasterScheduler(code, SimulatedBackend(), cfg), reqs)
+    a = _serve(MasterScheduler(code, SimulatedBackend(), cfg), reqs)
     b = _serve(MasterScheduler(code, SimulatedBackend(), cfg), reqs)
     assert a == b
 

@@ -234,7 +234,7 @@ def test_local_transport_roundtrip_and_shm_released():
 
 
 def test_make_transport_rejects_unknown_name():
-    with pytest.raises(ValueError, match="valid transports: local, socket"):
+    with pytest.raises(ValueError, match="unknown transport .*valid: local, socket"):
         make_transport("carrier-pigeon")
 
 
