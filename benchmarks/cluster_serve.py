@@ -43,7 +43,9 @@ is a transport bug, not a deployment cost.
 Fourth scenario — **observability overhead**: the same workload under a
 *fixed* 0.25 s per-task delay served twice, once bare and once with the
 full ``repro.obs`` wiring live (MetricsRegistry through pool / transport /
-backend / master plus a per-shard Tracer).  The fixed delay makes the TTA
+backend / master, a per-shard Tracer, a ticking time-series sampler, a
+burn-rate tracker, and a scraping HTTP exporter).  The fixed delay makes
+the TTA
 floor deterministic, so ``obs_over_plain`` isolates the recording cost;
 the in-module gate asserts it stays under ``OBS_GATE`` (1.05×) — the
 instruments are supposed to be counter bumps and timestamp appends, never
@@ -244,20 +246,31 @@ def _serve_obs_arm(seed: int, *, instrument: bool):
 
     The instrumented arm threads a live :class:`MetricsRegistry` through
     pool, transport, backend, cache-free master path *and* runs a
-    :class:`Tracer` — the exact configuration ``--metrics-out`` +
+    :class:`Tracer`, a ticking :class:`TimeSeriesSampler`, a
+    :class:`BurnRateTracker`, and a scraping :class:`MetricsExporter`
+    on an ephemeral port — the heaviest live configuration
+    ``--metrics-port`` + ``--sample-interval`` + ``--burn-alerts`` +
     ``--trace-out`` enables.  Returns ``(mean tta, counters | None)``.
     """
-    from repro.obs import MetricsRegistry, Tracer
+    from repro.obs import (BurnRateTracker, MetricsExporter,
+                           MetricsRegistry, TimeSeriesSampler, Tracer)
     code = MatDotCode(K, N_PINNED, x_complex(N_PINNED, 0.1))
     registry = MetricsRegistry() if instrument else None
     tracer = Tracer() if instrument else None
+    sampler = burn = exporter = None
+    if instrument:
+        sampler = TimeSeriesSampler(registry, interval=0.05)
+        burn = BurnRateTracker(objective=0.9, window=5.0, metrics=registry,
+                               tracer=tracer)
+        exporter = MetricsExporter(registry, sampler=sampler, burn=burn,
+                                   port=0).start()
     backend = ClusterBackend(workers=N_PINNED, chaos=OBS_CHAOS, seed=seed,
                              metrics=registry)
     try:
         backend.pool.lease(N_PINNED)
         cfg = ServeConfig(deadlines=(DEADLINE,), batch_size=2, seed=seed)
         sched = MasterScheduler(code, backend, cfg, metrics=registry,
-                                tracer=tracer)
+                                tracer=tracer, sampler=sampler, burn=burn)
         rng = np.random.default_rng(seed)
         for _ in range(REQUESTS):
             sched.submit(rng.standard_normal((ROWS, INNER)),
@@ -270,6 +283,8 @@ def _serve_obs_arm(seed: int, *, instrument: bool):
         snap = registry.snapshot()["counters"] if instrument else None
         return float(np.mean(ttas)), snap
     finally:
+        if exporter is not None:
+            exporter.stop()
         backend.close()
 
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import MatDotCode, x_complex
 from repro.ioutil import write_json_atomic
+from repro.obs import BurnRateTracker, MetricsRegistry, TimeSeriesSampler
 from repro.serving import (MasterScheduler, ServeConfig, SimulatedBackend,
                            TenantSpec, build_workload, make_backend,
                            run_load)
@@ -65,7 +66,8 @@ def make_code():
     return LayerSACCode(K, N, base="ortho", eps=6.25e-3)
 
 
-def make_sched(*, policy: bool) -> MasterScheduler:
+def make_sched(*, policy: bool, metrics=None, sampler=None,
+               burn=None) -> MasterScheduler:
     cfg = ServeConfig(
         deadlines=DEADLINES, batch_size=BATCH, seed=SEED,
         queue_policy="edf" if policy else "fifo",
@@ -73,7 +75,7 @@ def make_sched(*, policy: bool) -> MasterScheduler:
         shed_expired=policy)
     return MasterScheduler(make_code(),
                            SimulatedBackend(straggler_frac=STRAGGLER_FRAC),
-                           cfg)
+                           cfg, metrics=metrics, sampler=sampler, burn=burn)
 
 
 def closed_loop_capacity(n: int) -> float:
@@ -91,8 +93,20 @@ def sim_arms(offered_rate: float, horizon: float) -> dict:
                        seed=SEED + 1)
     out = {}
     for name, policy in (("fifo", False), ("policy", True)):
-        sched = make_sched(policy=policy)
-        out[name] = run_load(sched, wl, horizon=horizon)
+        if policy:
+            # the policy arm carries the live-telemetry stack so the
+            # artifact records the burn trajectory under overload
+            registry = MetricsRegistry()
+            sampler = TimeSeriesSampler(registry, interval=horizon / 64)
+            burn = BurnRateTracker(objective=0.9, window=horizon / 2,
+                                   metrics=registry)
+            sched = make_sched(policy=True, metrics=registry,
+                               sampler=sampler, burn=burn)
+            out[name] = run_load(sched, wl, horizon=horizon, burn=burn)
+            out[name].queue["samples_timeseries"] = len(sampler)
+        else:
+            sched = make_sched(policy=policy)
+            out[name] = run_load(sched, wl, horizon=horizon)
     return out
 
 
@@ -159,6 +173,7 @@ def main(quick: bool | None = None, report_path: str | None = None):
                         "goodput_policy": pol.goodput,
                         "passed": bool(gain >= 1.5
                                        and pol.goodput >= fifo.goodput)},
+               "burn": pol.burn,
                "arms": {"sim_fifo": fifo.to_dict(),
                         "sim_policy": pol.to_dict(),
                         "cluster": cluster}}

@@ -68,6 +68,7 @@ class ClusterDispatch:
         self.batch_id = backend._next_batch_id()
         self.max_requeue = backend.max_requeue
         self._m = backend._m                      # backend.* counters
+        self._h_phase = backend._h_phase          # per-phase latency hists
         if backend.speculate_enabled:
             # a worker wedged on a previous batch (hung primary whose shard
             # a backup won) must not be handed a fresh shard
@@ -279,6 +280,10 @@ class ClusterDispatch:
             t = self._stamp()
             self.times[shard] = t
             self.products[shard] = P
+            if timings is not None:
+                self._h_phase["wait"].observe(timings[0])
+                self._h_phase["operands"].observe(timings[1])
+                self._h_phase["compute"].observe(timings[2])
             return ShardEvent(kind="done", shard=shard, t=t, worker=wid,
                               products=P, speculative=wid != primary,
                               timings=timings)
@@ -379,6 +384,15 @@ class ClusterBackend(ExecutionBackend):
         self._m = {k: self.metrics.counter("backend." + k)
                    for k in ("batches_dispatched", "shards_dispatched",
                              "speculations", "requeues")}
+        # per-phase shard latency distributions from the worker-reported
+        # timing triples — the aggregate view attribution drills into
+        self._h_phase = {
+            "wait": self.metrics.histogram("backend.shard_wait_seconds"),
+            "operands": self.metrics.histogram(
+                "backend.shard_operand_seconds"),
+            "compute": self.metrics.histogram(
+                "backend.shard_compute_seconds"),
+        }
         self.grace = float(grace)
         self.sync_timeout = float(sync_timeout)
         self.speculate_enabled = bool(speculate)

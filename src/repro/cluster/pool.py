@@ -127,12 +127,24 @@ class WorkerPool:
         # _bump so ``pool.<key>`` counters and ``stats`` cannot diverge
         self._mcounters = {k: self.metrics.counter("pool." + k)
                            for k in self.stats}
+        # fleet-composition gauges for the time-series sampler; every
+        # fleet mutation also bumps a counter, so refreshing them from
+        # _bump keeps the levels exact without per-site wiring
+        self._g_active = self.metrics.gauge("pool.active_workers")
+        self._g_spare = self.metrics.gauge("pool.spare_workers")
+        self._g_backup = self.metrics.gauge("pool.backup_workers")
         if workers:
             self.acquire(workers)
 
     def _bump(self, key: str, n: int = 1) -> None:
         self.stats[key] += n
         self._mcounters[key].inc(n)
+        self._refresh_gauges()
+
+    def _refresh_gauges(self) -> None:
+        self._g_active.set(len(self._active))
+        self._g_spare.set(len(self._spares))
+        self._g_backup.set(len(self._backups))
 
     # ---------------------------------------------------------------- sizing
     @property
@@ -213,6 +225,7 @@ class WorkerPool:
                 self._spares.append(h)
             else:
                 self._shutdown_handle(h)
+        self._refresh_gauges()
 
     def lease(self, n: int) -> list[int]:
         """Rightsize the active fleet to exactly ``n`` and return it in order.

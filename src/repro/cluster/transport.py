@@ -190,7 +190,7 @@ class _TransportMetrics:
     """
 
     __slots__ = ("msgs", "frames", "bytes", "operands", "cache_hits",
-                 "deaths")
+                 "deaths", "live")
 
     def __init__(self, registry):
         self.msgs = registry.counter("transport.msgs_sent")
@@ -199,6 +199,7 @@ class _TransportMetrics:
         self.operands = registry.counter("transport.operands_published")
         self.cache_hits = registry.counter("transport.operand_cache_hits")
         self.deaths = registry.counter("transport.channel_deaths")
+        self.live = registry.gauge("transport.live_operands")
 
 
 _NULL_TM = _TransportMetrics(NULL_REGISTRY)
@@ -376,10 +377,12 @@ class Transport:
     def _track(self, handle: OperandHandle) -> OperandHandle:
         self._published[handle.token] = handle
         self._tm.operands.inc()
+        self._tm.live.set(len(self._published))
         return handle
 
     def _untrack(self, token) -> None:
         self._published.pop(token, None)
+        self._tm.live.set(len(self._published))
 
     def close(self) -> None:
         for handle in list(self._published.values()):

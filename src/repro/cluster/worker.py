@@ -363,16 +363,22 @@ def worker_main(worker_id: int, endpoint_arg, plan: WorkerPlan,
                     os._exit(13)                 # hard death: no cleanup
                 if plan.hang:
                     time.sleep(_HANG_SECONDS)
-            delay = plan.slow_delay
             if plan.sleep is not None:
-                delay += float(rng.uniform(plan.sleep[0], plan.sleep[1]))
-            if delay > 0:
-                time.sleep(delay)
+                # jitter chaos models scheduling noise: it lands in the
+                # wait phase, before the worker picks the task up
+                jitter = float(rng.uniform(plan.sleep[0], plan.sleep[1]))
+                if jitter > 0:
+                    time.sleep(jitter)
             _, batch_id, shard, ref = msg
             t_op = time.monotonic()              # wait = chaos + queueing
             try:
                 E_A, E_B = endpoint.get_operands(ref)
                 t_cmp = time.monotonic()
+                if plan.slow_delay > 0:
+                    # slow-worker chaos models a degraded device: it lands
+                    # in the compute phase, so attribution names the sick
+                    # worker's compute — total task latency is unchanged
+                    time.sleep(plan.slow_delay)
                 P = computer.shard_products(E_A, E_B, int(shard))
             finally:
                 endpoint.release_operands()

@@ -326,6 +326,26 @@ def build_parser() -> argparse.ArgumentParser:
                      help="dump the last-N runtime events + a metrics "
                      "snapshot to PATH when a serve aborts (exception, "
                      "all-shards-lost batch, hang-abandon)")
+    obs.add_argument("--sample-interval", type=float, default=None,
+                     metavar="SECONDS",
+                     help="tick a ring-buffer time-series sampler from the "
+                     "event loop every SECONDS (virtual clock on modeled "
+                     "backends, wall clock on the cluster)")
+    obs.add_argument("--metrics-port", type=int, default=None,
+                     metavar="PORT",
+                     help="serve live Prometheus text (/metrics) and a "
+                     "JSON scrape (/json) on 127.0.0.1:PORT from a "
+                     "background thread (0 = ephemeral port)")
+    obs.add_argument("--burn-alerts", action="store_true",
+                     help="track per-tenant SLO error-budget burn rate "
+                     "(multi-window 1x/6x) and stamp fire/clear alerts "
+                     "into the trace + flight recorder")
+    obs.add_argument("--burn-objective", type=float, default=0.9,
+                     help="--burn-alerts: target SLO hit fraction "
+                     "(default 0.9 — a 10%% error budget)")
+    obs.add_argument("--burn-window", type=float, default=30.0,
+                     help="--burn-alerts: long burn window in serve-clock "
+                     "seconds (short window is 1/6 of it; default 30)")
     return ap
 
 
@@ -383,6 +403,24 @@ def _collect_problems(args) -> list[str]:
     if args.max_requeue < 1:
         problems.append(f"--max-requeue must be >= 1; got "
                         f"{args.max_requeue}")
+    if args.sample_interval is not None and args.sample_interval <= 0:
+        problems.append(f"--sample-interval must be > 0; got "
+                        f"{args.sample_interval}")
+    if args.metrics_port is not None \
+            and not 0 <= args.metrics_port <= 65535:
+        problems.append(f"--metrics-port must be in [0, 65535]; got "
+                        f"{args.metrics_port}")
+    if not args.burn_alerts:
+        if args.burn_objective != 0.9:
+            problems.append("--burn-objective requires --burn-alerts")
+        if args.burn_window != 30.0:
+            problems.append("--burn-window requires --burn-alerts")
+    elif not 0.0 < args.burn_objective < 1.0:
+        problems.append(f"--burn-objective must be in (0, 1); got "
+                        f"{args.burn_objective}")
+    elif args.burn_window <= 0:
+        problems.append(f"--burn-window must be > 0; got "
+                        f"{args.burn_window}")
     for flag, name in ((args.drift != "none", "--drift"),
                        (args.per_class, "--per-class"),
                        (args.cost_aware, "--cost-aware"),
@@ -517,15 +555,43 @@ def run_serve(args) -> ServeReport:
                   straggler_frac=args.straggler_frac,
                   cache_size=args.cache_size, class_cache=args.class_cache)
     # observability wiring: a live registry when anything will read it
-    # (the flight recorder snapshots it into every dump); None otherwise
-    # so every layer keeps its no-op instruments
-    from repro.obs import FlightRecorder, MetricsRegistry, Tracer
+    # (the flight recorder snapshots it into every dump, the sampler /
+    # exporter / burn tracker read it live); None otherwise so every
+    # layer keeps its no-op instruments
+    from repro.obs import (BurnRateTracker, FlightRecorder, MetricsExporter,
+                           MetricsRegistry, TimeSeriesSampler, Tracer)
+    live_obs = (args.sample_interval is not None
+                or args.metrics_port is not None or args.burn_alerts)
     registry = MetricsRegistry() \
         if (args.metrics_out is not None
-            or args.flight_recorder is not None) else None
+            or args.flight_recorder is not None or live_obs) else None
     tracer = Tracer() if args.trace_out is not None else None
     flight = FlightRecorder(args.flight_recorder) \
         if args.flight_recorder is not None else None
+    # an exporter without an explicit sampling interval still gets a
+    # series to serve: default to 4 Hz
+    interval = args.sample_interval if args.sample_interval is not None \
+        else (0.25 if args.metrics_port is not None else None)
+    sampler = TimeSeriesSampler(registry, interval=interval) \
+        if interval is not None else None
+    burn = None
+    if args.burn_alerts:
+        from repro.obs import NULL_FLIGHT, NULL_TRACER
+        burn = BurnRateTracker(
+            objective=args.burn_objective, window=args.burn_window,
+            metrics=registry,
+            tracer=tracer if tracer is not None else NULL_TRACER,
+            flight=flight if flight is not None else NULL_FLIGHT)
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs import NULL_BURN, NULL_SAMPLER
+        # started before the pool spawns so a scraper sees the whole run,
+        # including worker startup
+        exporter = MetricsExporter(
+            registry, sampler=sampler if sampler is not None
+            else NULL_SAMPLER,
+            burn=burn if burn is not None else NULL_BURN,
+            port=args.metrics_port).start()
     if args.replay is not None:
         from repro.cluster import TraceRecording
         try:
@@ -583,7 +649,8 @@ def run_serve(args) -> ServeReport:
             max_per_batch=args.max_speculations)
     sched = MasterScheduler(code, backend, cfg, cache, policy=policy,
                             speculation=speculation, metrics=registry,
-                            tracer=tracer, flight=flight)
+                            tracer=tracer, flight=flight, sampler=sampler,
+                            burn=burn)
     tune_report = None
     if args.autotune:
         tune_report = {"restored": False, "restored_from": None,
@@ -637,6 +704,8 @@ def run_serve(args) -> ServeReport:
             path = flight.dump("exception", registry)
             print(f"[serve] flight recorder dumped {len(flight)} event(s) "
                   f"to {path} (reason: exception)")
+        if exporter is not None:
+            exporter.stop()
         raise
     wall = time.time() - t0
 
@@ -648,7 +717,16 @@ def run_serve(args) -> ServeReport:
                     "rel_err": (None if a.rel_err is None
                                 else float(a.rel_err))}
                    for a in res.answers]
-        requests.append({"req_id": res.req_id, "answers": answers})
+        # lifecycle stamps ride along for offline attribution
+        # (tools/sac_top.py attribution); additive keys only — the
+        # pinned [serve] req lines never read them
+        requests.append({"req_id": res.req_id, "answers": answers,
+                         "batch": res.batch, "tenant": res.tenant,
+                         "arrival": res.arrival,
+                         "t_dispatch": res.t_dispatch,
+                         "t_target": res.t_target, "t_done": res.t_done,
+                         "t_exact": res.t_exact, "ttfa": res.ttfa,
+                         "slo_ok": res.slo_ok, "dropped": res.dropped})
         for a in res.answers:
             if a.kind == "deadline" and a.rel_err is not None:
                 agg[a.t].append(a.rel_err)
@@ -728,7 +806,7 @@ def run_serve(args) -> ServeReport:
         backend.close()
     obs_report = None
     if (args.metrics_out is not None or tracer is not None
-            or flight is not None):
+            or flight is not None or live_obs):
         obs_report = {"metrics_out": args.metrics_out,
                       "trace_out": args.trace_out,
                       "trace_events": (tracer.n_events
@@ -736,10 +814,22 @@ def run_serve(args) -> ServeReport:
                       "flight_recorder": args.flight_recorder,
                       "flight_dumps": (list(flight.dumps)
                                        if flight is not None else [])}
+        if sampler is not None:
+            obs_report["sample_interval"] = sampler.interval
+            obs_report["samples"] = len(sampler)
+        if exporter is not None:
+            obs_report["metrics_port"] = exporter.port
+        if burn is not None:
+            obs_report["burn"] = {"objective": burn.objective,
+                                  "window": burn.window,
+                                  "alerts": len(burn.alerts),
+                                  "firing": burn.firing()}
         if args.metrics_out is not None:
             registry.save(args.metrics_out)
         if tracer is not None:
             tracer.save(args.trace_out)
+    if exporter is not None:
+        exporter.stop()
     return ServeReport(config=config, code=code_report, requests=requests,
                        summary=summary, cache=cache_report,
                        autotune=tune_report, cluster=cluster_report,
@@ -870,6 +960,18 @@ def _render_report(rep: ServeReport) -> None:
             if not ob["flight_dumps"]:
                 print("[serve] flight recorder armed; no abort, nothing "
                       "dumped")
+        if "samples" in ob:
+            print(f"[serve] time-series: {ob['samples']} sample(s) at "
+                  f"{ob['sample_interval']}s interval")
+        if "metrics_port" in ob:
+            print(f"[serve] metrics exporter served on port "
+                  f"{ob['metrics_port']}")
+        if "burn" in ob:
+            b = ob["burn"]
+            firing = ", ".join(b["firing"]) if b["firing"] else "none"
+            print(f"[serve] burn-rate: objective {b['objective']:g}, "
+                  f"window {b['window']:g}s, {b['alerts']} alert "
+                  f"transition(s), firing at exit: {firing}")
 
 
 def main(argv=None):

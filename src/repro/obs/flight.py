@@ -27,17 +27,27 @@ class FlightRecorder:
 
     enabled = True
 
-    def __init__(self, path: str, capacity: int = 256):
+    def __init__(self, path: str, capacity: int = 256,
+                 series_tail: int = 64):
         if capacity < 1:
             raise ValueError("flight recorder capacity must be >= 1")
         self.path = str(path)
         self.capacity = int(capacity)
+        self.series_tail = int(series_tail)
         self._ring: deque = deque(maxlen=self.capacity)
         self._seq = 0
+        self._sampler = None         # bound TimeSeriesSampler, if any
         self.dumps: list[str] = []   # paths written, in dump order
 
     def __len__(self) -> int:
         return len(self._ring)
+
+    def bind_sampler(self, sampler) -> None:
+        """Attach a time-series sampler; dumps then embed its last
+        ``series_tail`` samples, so an abort shows the minutes *before*
+        death, not just the final counter state."""
+        self._sampler = sampler if getattr(sampler, "enabled", False) \
+            else None
 
     def record(self, kind: str, **fields) -> None:
         """Append one event to the ring (evicting the oldest when full)."""
@@ -64,6 +74,8 @@ class FlightRecorder:
         if metrics is not None:
             snap = metrics.snapshot() if hasattr(metrics, "snapshot") else metrics
             payload["metrics"] = snap
+        if self._sampler is not None:
+            payload["series"] = self._sampler.last(self.series_tail)
         path = self._dump_path()
         write_json_atomic(path, payload, indent=2)
         self.dumps.append(path)
@@ -79,6 +91,9 @@ class _NullFlightRecorder:
 
     def __len__(self) -> int:
         return 0
+
+    def bind_sampler(self, sampler) -> None:
+        pass
 
     def record(self, kind, **fields) -> None:
         pass

@@ -93,10 +93,42 @@ class Histogram:
         if self.max is None or v > self.max:
             self.max = v
 
+    def quantile(self, q: float) -> float | None:
+        """Bucket-interpolated quantile estimate (``None`` when empty).
+
+        Observations inside a bucket are assumed uniform: the target rank
+        interpolates linearly between the bucket's bounds.  The first
+        bucket's lower bound is the observed ``min`` (no negative-latency
+        estimates) and the overflow bucket is pinned to ``[last bound,
+        max]`` — so on data narrower than the grid the estimate collapses
+        toward the true order statistics instead of a bucket edge.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if self.count == 0:
+            return None
+        rank = q * self.count
+        cum = 0
+        for i, n in enumerate(self.counts):
+            if n == 0:
+                continue
+            if cum + n >= rank:
+                lo = self.buckets[i - 1] if i > 0 else self.min
+                hi = self.buckets[i] if i < len(self.buckets) else self.max
+                lo = max(lo, self.min) if self.min is not None else lo
+                hi = min(hi, self.max) if self.max is not None else hi
+                if hi < lo:
+                    hi = lo
+                frac = (rank - cum) / n
+                return lo + (hi - lo) * min(1.0, max(0.0, frac))
+            cum += n
+        return self.max
+
     def to_value(self):
         return {"count": self.count, "total": self.total,
                 "mean": self.total / self.count if self.count else 0.0,
                 "min": self.min, "max": self.max,
+                "p50": self.quantile(0.5), "p99": self.quantile(0.99),
                 "buckets": list(self.buckets), "counts": list(self.counts)}
 
 

@@ -79,9 +79,13 @@ class Tracer:
         self._events.append(("redispatch", batch_id, shard, worker,
                             float(t), str(reason)))
 
-    def decode_apply(self, batch_id: int, shard: int, t: float) -> None:
-        """The master pushed the shard's product into the decoders."""
-        self._events.append(("decode", batch_id, shard, float(t)))
+    def decode_apply(self, batch_id: int, shard: int, t: float,
+                     dur: float | None = None) -> None:
+        """The master pushed the shard's product into the decoders.
+        ``dur`` is the measured wall seconds of the rank-1 update batch
+        (``None`` when the scheduler runs with metrics timing off)."""
+        self._events.append(("decode", batch_id, shard, float(t),
+                             None if dur is None else float(dur)))
 
     def milestone(self, batch_id: int, name: str, t: float, **args) -> None:
         """Accuracy milestone (first-threshold, exact, deadline tick)."""
@@ -116,7 +120,7 @@ class Tracer:
                 start = min(max(0.0, start), t)
                 worker_lanes.add(wid)
                 args = {"batch": bid, "shard": shard, "worker": wid,
-                        "speculative": spec}
+                        "speculative": spec, "t_s": t}
                 if timings is not None:
                     wait, operands, compute = (float(x) for x in timings)
                     args.update(wait_s=wait, operand_resolve_s=operands,
@@ -141,11 +145,14 @@ class Tracer:
                     _PID_WORKERS, wid, scope="t",
                     args={"batch": bid, "shard": shard}))
             elif kind == "decode":
-                _, bid, shard, t = ev
+                _, bid, shard, t, dur = (ev if len(ev) == 5
+                                         else (*ev, None))
+                dargs = {"batch": bid, "shard": shard}
+                if dur is not None:
+                    dargs["dur_s"] = dur
                 events.append(_instant(
                     "decode-apply", self._base_us(bid) + t * _US,
-                    _PID_MASTER, 0, scope="t",
-                    args={"batch": bid, "shard": shard}))
+                    _PID_MASTER, 0, scope="t", args=dargs))
             elif kind == "milestone":
                 _, bid, name, t, args = ev
                 events.append(_instant(
@@ -207,7 +214,7 @@ class _NullTracer:
     def redispatch(self, batch_id, shard, worker, t, reason) -> None:
         pass
 
-    def decode_apply(self, batch_id, shard, t) -> None:
+    def decode_apply(self, batch_id, shard, t, dur=None) -> None:
         pass
 
     def milestone(self, batch_id, name, t, **args) -> None:

@@ -231,13 +231,17 @@ class LoadReport:
     goodput: float
     tenants: dict = field(default_factory=dict)
     queue: dict = field(default_factory=dict)
+    burn: dict | None = None   # BurnRateTracker.to_dict() when tracked
 
     def to_dict(self) -> dict:
-        return {"kind": "load-report", "horizon": self.horizon,
-                "offered": self.offered, "served": self.served,
-                "shed": self.shed, "dropped": self.dropped,
-                "p99_tta": self.p99_tta, "goodput": self.goodput,
-                "tenants": self.tenants, "queue": self.queue}
+        out = {"kind": "load-report", "horizon": self.horizon,
+               "offered": self.offered, "served": self.served,
+               "shed": self.shed, "dropped": self.dropped,
+               "p99_tta": self.p99_tta, "goodput": self.goodput,
+               "tenants": self.tenants, "queue": self.queue}
+        if self.burn is not None:
+            out["burn"] = self.burn
+        return out
 
     def save(self, path: str) -> str:
         return write_json_atomic(path, self.to_dict(), indent=2)
@@ -260,8 +264,8 @@ def _pct(samples: list[float], q: float) -> float | None:
     return float(np.percentile(np.asarray(samples, dtype=np.float64), q))
 
 
-def summarize_load(sched, workload, results, *,
-                   horizon: float) -> LoadReport:
+def summarize_load(sched, workload, results, *, horizon: float,
+                   burn=None) -> LoadReport:
     """Aggregate one :meth:`MasterScheduler.run_open` pass into a report."""
     horizon = float(horizon)
     if horizon <= 0:
@@ -310,11 +314,14 @@ def summarize_load(sched, workload, results, *,
                       shed=len(sched.shed),
                       dropped=sum(t["dropped"] for t in tenants.values()),
                       p99_tta=_pct(all_ttas, 99), goodput=hits / horizon,
-                      tenants=tenants, queue=queue)
+                      tenants=tenants, queue=queue,
+                      burn=(burn.to_dict()
+                            if getattr(burn, "enabled", False) else None))
 
 
 def run_load(sched, workload, *, horizon: float,
-             realtime: bool | None = None) -> LoadReport:
+             realtime: bool | None = None, burn=None) -> LoadReport:
     """Drive one workload through ``sched.run_open`` and summarize it."""
     results = sched.run_open(workload, realtime=realtime)
-    return summarize_load(sched, workload, results, horizon=horizon)
+    return summarize_load(sched, workload, results, horizon=horizon,
+                          burn=burn)

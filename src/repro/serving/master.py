@@ -53,7 +53,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.codes.base import CDCCode
-from ..obs import NULL_FLIGHT, NULL_REGISTRY, NULL_TRACER
+from ..obs import NULL_BURN, NULL_FLIGHT, NULL_REGISTRY, NULL_SAMPLER, \
+    NULL_TRACER
 from .backends import ExecutionBackend, SimulatedBackend
 from ..names import unknown_name
 from .cache import DecodeWeightCache
@@ -136,6 +137,8 @@ class RequestResult:
     # stay relative to the batch dispatch, as in closed-loop serving)
     tenant: str | None = None
     arrival: float = 0.0
+    batch: int | None = None         # dispatch id serving this request (the
+    #                                  tracer's batch key; None when dropped)
     t_dispatch: float | None = None  # instant the batch left the queue
     t_target: float | None = None    # instant the accuracy SLO was met
     t_done: float | None = None      # instant the batch released (or the
@@ -178,7 +181,7 @@ class MasterScheduler:
                  config: ServeConfig | None = None,
                  cache: DecodeWeightCache | None = _DEFAULT_CACHE,
                  policy=None, speculation=None, metrics=None, tracer=None,
-                 flight=None):
+                 flight=None, sampler=None, burn=None):
         self.code = code
         self.backend = backend if backend is not None else SimulatedBackend()
         self.config = config if config is not None else ServeConfig()
@@ -188,15 +191,25 @@ class MasterScheduler:
         self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.flight = flight if flight is not None else NULL_FLIGHT
+        self.sampler = sampler if sampler is not None else NULL_SAMPLER
+        self.burn = burn if burn is not None else NULL_BURN
+        if self.flight.enabled and self.sampler.enabled:
+            self.flight.bind_sampler(self.sampler)
         # gate perf_counter pairs (a real cost even when discarded) on one
         # bool instead of the registry's no-op instruments
         self._m_on = self.metrics.enabled
         self._g_queue = self.metrics.gauge("serve.queue_depth")
+        self._g_inflight = self.metrics.gauge("serve.inflight_shards")
+        self._g_err = self.metrics.gauge("serve.last_rel_err")
         self._h_tick = self.metrics.histogram("serve.decode_tick_seconds")
         self._h_ttfa = self.metrics.histogram("serve.tta_first_seconds")
         self._h_tta = self.metrics.histogram("serve.tta_exact_seconds")
         self._h_depth = self.metrics.histogram("serve.queue_depth_sampled")
+        self._h_decode = self.metrics.histogram("serve.decode_push_seconds")
         self._c_shed = self.metrics.counter("serve.shed")
+        # global serve clock for closed-loop telemetry: accumulated batch
+        # spans, so sampler ticks share one timeline with open-loop runs
+        self._clock = 0.0
         if self.config.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got "
                              f"{self.config.batch_size}")
@@ -476,6 +489,7 @@ class MasterScheduler:
                     t_now = time.monotonic() - t0_wall
                 else:
                     t_now = max(t_now, feed.next_time)
+                self.sampler.tick(t_now)
                 feed.admit_until(t_now)
                 continue
             # dispatch instant: strictly-earlier arrivals are already in
@@ -535,7 +549,7 @@ class MasterScheduler:
                 res = RequestResult(r.req_id, tenant=r.tenant,
                                     arrival=r.arrival, t_done=t_now,
                                     slo_ok=False, dropped="expired")
-                self._slo_count(r.tenant, False)
+                self._slo_count(r.tenant, False, t_now)
                 self.metrics.counter("serve.dropped_expired").inc()
                 dropped.append(res)
             else:
@@ -545,10 +559,12 @@ class MasterScheduler:
             self._g_queue.set(len(self._queue))
         return dropped
 
-    def _slo_count(self, tenant: str | None, hit: bool) -> None:
+    def _slo_count(self, tenant: str | None, hit: bool,
+                   t: float = 0.0) -> None:
         label = tenant if tenant is not None else "default"
         kind = "slo_hit" if hit else "slo_miss"
         self.metrics.counter(f"serve.{kind}.{label}").inc()
+        self.burn.observe(label, hit, t)
 
     def _fleet_for(self, code: CDCCode) -> int:
         """Shards actually dispatched for a batch served under ``code``.
@@ -665,6 +681,10 @@ class MasterScheduler:
         # bookkeeping and must not inflate the measured completion times
         refs, decoders, results = self._prepare_batch(batch, code, cfg)
         t_start = open_ctx.t_start if open_ctx is not None else 0.0
+        # telemetry timebase: open-loop events already live on the global
+        # clock via t_start; closed-loop batches stack onto the accumulated
+        # serve clock so sampler ticks share one monotone timeline
+        t_base = t_start if open_ctx is not None else self._clock
         slo_active = open_ctx is not None \
             and any(r.target is not None for r in batch)
         if open_ctx is not None:
@@ -679,9 +699,13 @@ class MasterScheduler:
         self._batches_served += 1
         # cluster dispatches carry a 1-based id; synthetic ones don't
         bid = int(getattr(dispatch, "batch_id", batch_no + 1))
+        for res in results:
+            res.batch = bid
         self.tracer.batch_begin(bid, Nf)
         self.flight.record("dispatch", batch=bid, shards=Nf,
                            requests=len(batch))
+        self._g_inflight.set(Nf)
+        self.sampler.tick(t_base)
         deadlines = sorted(float(d) for d in cfg.deadlines)
         grace = float(getattr(self.backend, "grace", 2.0))
         bound = deadlines[-1] if deadlines else 0.0
@@ -736,6 +760,7 @@ class MasterScheduler:
                 if ev is None:
                     # deadline reached or spurious wake — a natural point to
                     # reconsider hedging the still-pending shards
+                    self.sampler.tick(t_base + dispatch.elapsed())
                     if open_ctx is not None:
                         open_ctx.feed.admit_until(
                             t_start + dispatch.elapsed())
@@ -764,9 +789,18 @@ class MasterScheduler:
                         start=disp_t.get(ev.shard, 0.0) if spec else 0.0,
                         timings=getattr(ev, "timings", None),
                         speculative=spec)
-                    for i, dec in enumerate(decoders):
-                        dec.push(ev.shard, ev.products[i])
-                    self.tracer.decode_apply(bid, ev.shard, ev.t)
+                    if self._m_on:
+                        d0 = time.perf_counter()
+                        for i, dec in enumerate(decoders):
+                            dec.push(ev.shard, ev.products[i])
+                        d_dur = time.perf_counter() - d0
+                        self._h_decode.observe(d_dur)
+                        self.tracer.decode_apply(bid, ev.shard, ev.t,
+                                                 dur=d_dur)
+                    else:
+                        for i, dec in enumerate(decoders):
+                            dec.push(ev.shard, ev.products[i])
+                        self.tracer.decode_apply(bid, ev.shard, ev.t)
                     shard_times[ev.shard] = ev.t
                     self.flight.record("done", batch=bid, shard=ev.shard,
                                        worker=ev.worker, t=ev.t, m=m)
@@ -794,6 +828,8 @@ class MasterScheduler:
                     self.flight.record("lost", batch=bid, shard=ev.shard,
                                        worker=ev.worker, t=ev.t,
                                        reason=ev.reason)
+                self._g_inflight.set(dispatch.outstanding)
+                self.sampler.tick(t_base + ev.t)
                 if open_ctx is not None:
                     t_glob = t_start + ev.t
                     if slo_active and ev.kind == "done":
@@ -818,6 +854,9 @@ class MasterScheduler:
         finally:
             if open_ctx is not None:
                 open_ctx.t_release = t_start + dispatch.elapsed()
+            else:
+                self._clock = t_base + dispatch.elapsed()
+            self._g_inflight.set(0)
             dispatch.finalize()
         t_sorted = np.sort(np.fromiter(shard_times.values(), np.float64,
                                        count=len(shard_times)))
@@ -832,7 +871,7 @@ class MasterScheduler:
                     hit = res.t_target is not None and (
                         r.deadline is None or res.t_target <= r.deadline)
                     res.slo_ok = hit
-                    self._slo_count(r.tenant, hit)
+                    self._slo_count(r.tenant, hit, open_ctx.t_release)
         if self._m_on:
             for _ in results:              # TTA series is per *request*
                 if first_t is not None:
@@ -917,15 +956,19 @@ class MasterScheduler:
     def _emit(self, batch, decoders, refs, results, t, m, R, kind,
               bid: int = 0) -> None:
         t0 = time.perf_counter() if self._m_on else 0.0
+        errs = []
         for dec, (C, norm, _), res in zip(decoders, refs, results):
             est = dec.estimate()
             err = None
             if est is not None and C is not None and norm > 0.0:
                 err = float(np.linalg.norm(est - C) ** 2 / norm)
+                errs.append(err)
             res.answers.append(Answer(t=t, m=m, rel_err=err,
                                       exact=m >= R, kind=kind))
         if self._m_on:
             self._h_tick.observe(time.perf_counter() - t0)
+            if errs:           # the sampler's anytime-accuracy trajectory
+                self._g_err.set(sum(errs) / len(errs))
         if kind == "deadline":
             self.tracer.milestone(bid, "deadline-tick", t, m=m)
 

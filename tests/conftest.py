@@ -1,0 +1,12 @@
+"""Shared test fixtures/paths.
+
+``tools/`` holds standalone scripts (no package), but their logic —
+trace validation, the sac_top dashboard/attribution CLI — is under test;
+put the directory on the import path so tests import them by module name.
+"""
+import os
+import sys
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(__file__)), "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)

@@ -1,0 +1,274 @@
+"""Tail-latency attribution: phase decomposition names the injected cause.
+
+The synthetic test hand-builds a trace with known phase shares and checks
+the decomposition returns exactly those shares.  The two chaos-scenario
+tests are the ISSUE's acceptance criteria: under ``slow:2:0.8`` on the
+cluster backend the report's top worker must be one of the designated
+slow workers with ``compute`` dominant, and under open-loop queue
+overload on the simulated backend the dominant phase must be
+``queue_wait``.  Trace-containment validation (``tools/validate_trace``)
+is covered here too: a good serve trace passes, a child span poking out
+of its parent fails.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.attribution import (PHASES, attribute,
+                                        attribution_report)
+from repro.cluster.backend import ClusterBackend
+from repro.core import LayerSACCode, MatDotCode, x_complex
+from repro.obs import Tracer
+from repro.serving import (MasterScheduler, ServeConfig, SimulatedBackend,
+                           TenantSpec, build_workload)
+
+import sac_top
+import validate_trace
+
+
+# ----------------------------------------------------------- synthetic
+
+def _synth_trace():
+    """One batch, two shards; shard 1 (worker 1) is the critical one."""
+    tr = Tracer()
+    tr.batch_begin(0, n_shards=2)
+    tr.done(0, 0, 0, 0.30, timings=(0.05, 0.05, 0.20))
+    tr.done(0, 1, 1, 1.00, timings=(0.10, 0.20, 0.70))
+    tr.decode_apply(0, 0, 0.30, dur=0.02)
+    tr.decode_apply(0, 1, 1.00, dur=0.03)
+    return tr
+
+
+def test_attribute_synthetic_known_shares():
+    req = {"req_id": 0, "tenant": "t", "arrival": 1.0, "batch": 0,
+           "t_dispatch": 1.5, "t_target": 2.5, "t_done": 2.6,
+           "t_exact": 1.0, "slo_ok": False, "dropped": None}
+    rows = attribute(_synth_trace(), [req])
+    assert len(rows) == 1
+    row = rows[0]
+    ph = row["phases"]
+    # target met at batch-local t = 1.0 -> critical shard is shard 1
+    assert row["worker"] == 1 and row["host"] == "local"
+    assert ph["queue_wait"] == pytest.approx(0.5)
+    assert ph["wait"] == pytest.approx(0.10)
+    assert ph["operand_ship"] == pytest.approx(0.20)
+    assert ph["compute"] == pytest.approx(0.70)
+    assert ph["decode"] == pytest.approx(0.05)
+    # accounted = 1.05 > rel_end 1.0 -> no residual
+    assert ph["other"] == 0.0
+    assert row["total"] == pytest.approx(1.5)
+    assert row["dominant"] == "compute"
+    assert set(ph) == set(PHASES)
+
+
+def test_attribute_dropped_request_is_pure_queue_wait():
+    req = {"req_id": 3, "tenant": "t", "arrival": 2.0, "batch": None,
+           "t_dispatch": None, "t_target": None, "t_done": 5.0,
+           "t_exact": None, "slo_ok": False, "dropped": "expired"}
+    row = attribute(_synth_trace(), [req])[0]
+    assert row["phases"]["queue_wait"] == pytest.approx(3.0)
+    assert row["total"] == pytest.approx(3.0)
+    assert row["dominant"] == "queue_wait"
+    assert row["worker"] is None and row["host"] is None
+
+
+def test_attribute_residual_lands_in_other():
+    req = {"req_id": 1, "tenant": "t", "arrival": 0.0, "batch": 0,
+           "t_dispatch": 0.0, "t_target": 2.0, "t_done": 2.0,
+           "t_exact": None, "slo_ok": True, "dropped": None}
+    row = attribute(_synth_trace(), [req])[0]
+    # rel_end 2.0, critical shard 1 accounts 1.0 + decode 0.05
+    assert row["phases"]["other"] == pytest.approx(0.95)
+
+
+def test_attribute_hosts_map_by_socket_rule():
+    req = {"req_id": 0, "tenant": "t", "arrival": 0.0, "batch": 0,
+           "t_dispatch": 0.0, "t_target": 1.0, "t_done": 1.0,
+           "t_exact": None, "slo_ok": True, "dropped": None}
+    row = attribute(_synth_trace(), [req], hosts=["hostA", "hostB"])[0]
+    assert row["worker"] == 1 and row["host"] == "hostB"
+
+
+def test_attribution_report_rankings_and_tail():
+    reqs = []
+    # 9 fast requests on worker 0's shard, one slow on worker 1's
+    for i in range(9):
+        reqs.append({"req_id": i, "tenant": "fast", "arrival": 0.0,
+                     "batch": 0, "t_dispatch": 0.0, "t_target": 0.3,
+                     "t_done": 0.3, "t_exact": None, "slo_ok": True,
+                     "dropped": None})
+    reqs.append({"req_id": 9, "tenant": "slow", "arrival": 0.0,
+                 "batch": 0, "t_dispatch": 0.0, "t_target": 1.0,
+                 "t_done": 1.0, "t_exact": None, "slo_ok": False,
+                 "dropped": None})
+    rep = attribution_report(_synth_trace(), reqs, tail_q=0.9)
+    assert rep["kind"] == "attribution-report"
+    assert rep["n_requests"] == 10 and rep["n_slo_misses"] == 1
+    # the tail request rode worker 1's slow shard: it tops the ranking
+    assert rep["workers"][0]["worker"] == 1
+    assert rep["workers"][0]["tail_requests"] == 1
+    assert rep["top_worker"]["worker"] == 1
+    assert rep["top_worker"]["dominant_phase"] == "compute"
+    assert rep["tenants"][0]["tenant"] == "slow"
+    assert abs(sum(rep["phase_shares"].values()) - 1.0) < 1e-9
+
+
+# ------------------------------------------------- chaos scenario: slow
+
+def test_attribution_names_slow_worker_compute_phase():
+    """slow:2:0.8 designates workers 0 and 1; the injected delay lands in
+    the compute phase, so the report must blame a slow worker's compute."""
+    K, N = 2, 4
+    code = MatDotCode(K, N, x_complex(N, 0.1))
+    tracer = Tracer()
+    cfg = ServeConfig(deadlines=(3.4,), batch_size=2, seed=0)
+    rng = np.random.default_rng(11)
+    with ClusterBackend(workers=N, chaos="slow:2:0.8,sleep:0.005:0.02",
+                        seed=6, grace=6.0) as be:
+        sched = MasterScheduler(code, be, cfg, tracer=tracer)
+        for _ in range(4):
+            sched.submit(rng.standard_normal((8, 4 * K)),
+                         rng.standard_normal((4 * K, 8)))
+        results = sched.run()
+    reqs = [{"req_id": r.req_id, "tenant": r.tenant, "arrival": r.arrival,
+             "batch": r.batch, "t_dispatch": r.t_dispatch,
+             "t_target": r.t_target, "t_done": r.t_done,
+             "t_exact": r.t_exact, "slo_ok": r.slo_ok,
+             "dropped": r.dropped} for r in results]
+    rep = attribution_report(tracer, reqs, tail_q=0.5)
+    # exact recovery needs R = 2K-1 = 3 of 4 shards: one slow worker's
+    # 0.8s compute is always on the critical path
+    assert rep["top_worker"]["worker"] in (0, 1), rep["top_worker"]
+    assert rep["top_worker"]["dominant_phase"] == "compute"
+    assert rep["dominant_phase"] == "compute"
+    assert rep["phase_shares"]["compute"] > 0.5
+
+
+def test_attribution_names_queue_wait_under_overload():
+    """Open-loop overload on the sim backend: the tail is admission
+    backlog, so queue_wait must dominate the decomposition."""
+    tenants = (TenantSpec("t", rows=16, inner=64, target_error=0.5,
+                          deadline=30.0),)
+    code = LayerSACCode(4, 8, base="ortho", eps=6.25e-3)
+    tracer = Tracer()
+    sched = MasterScheduler(code, SimulatedBackend(),
+                            ServeConfig(deadlines=(1.1, 1.6), seed=7,
+                                        batch_size=2),
+                            tracer=tracer)
+    # rate far above sim capacity, unbounded FIFO queue: queueing blows up
+    wl = build_workload(tenants, rate=30.0, horizon=2.0, seed=5)
+    results = sched.run_open(wl)
+    reqs = [{"req_id": r.req_id, "tenant": r.tenant, "arrival": r.arrival,
+             "batch": r.batch, "t_dispatch": r.t_dispatch,
+             "t_target": r.t_target, "t_done": r.t_done,
+             "t_exact": r.t_exact, "slo_ok": r.slo_ok,
+             "dropped": r.dropped} for r in results]
+    rep = attribution_report(tracer, reqs)
+    assert rep["dominant_phase"] == "queue_wait"
+    assert rep["phase_shares"]["queue_wait"] > 0.5
+
+
+# ---------------------------------------------------- trace containment
+
+def test_validate_trace_passes_real_serve_trace(tmp_path):
+    tracer = Tracer()
+    tracer.batch_begin(0, n_shards=1)
+    tracer.done(0, 0, 2, 0.5, timings=(0.1, 0.1, 0.2))
+    tracer.decode_apply(0, 0, 0.5, dur=0.01)
+    tracer.milestone(0, "exact", 0.5)
+    path = tracer.save(str(tmp_path / "t.json"))
+    assert validate_trace.validate(path) == []
+
+
+def test_validate_trace_flags_child_escaping_parent(tmp_path):
+    tracer = Tracer()
+    tracer.batch_begin(0, n_shards=1)
+    tracer.done(0, 0, 2, 0.5, timings=(0.1, 0.1, 0.2))
+    tracer.milestone(0, "exact", 0.5)
+    doc = tracer.to_dict()
+    for ev in doc["traceEvents"]:
+        if ev.get("name") == "compute":
+            ev["dur"] += 1000.0                # poke past the parent edge
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps(doc))
+    problems = validate_trace.validate(str(path))
+    assert any("not contained" in p for p in problems)
+
+
+def test_validate_trace_containment_ignores_other_batches(tmp_path):
+    # same tid, different batch: shard span of batch 1 must not legitimise
+    # a stray child tagged batch 0
+    tracer = Tracer()
+    tracer.batch_begin(0)
+    tracer.done(0, 0, 2, 0.5, timings=(0.1, 0.1, 0.2))
+    tracer.batch_begin(1)
+    tracer.done(1, 0, 2, 0.5)
+    tracer.milestone(0, "exact", 0.5)
+    doc = tracer.to_dict()
+    for ev in doc["traceEvents"]:
+        if ev.get("name") == "compute":
+            ev["args"]["batch"] = 99
+    path = tmp_path / "bad2.json"
+    path.write_text(json.dumps(doc))
+    problems = validate_trace.validate(str(path))
+    assert any("batch 99" in p for p in problems)
+
+
+# ------------------------------------------------------------- sac_top
+
+def _scrape():
+    return {"kind": "metrics-scrape",
+            "snapshot": {"counters": {"serve.slo_hit.a": 8,
+                                      "serve.slo_miss.a": 2},
+                         "gauges": {"serve.queue_depth": 3},
+                         "histograms": {"serve.tta_exact_seconds": {
+                             "count": 4, "p50": 0.2, "p99": 0.9,
+                             "total": 1.0, "min": 0.1, "max": 0.9,
+                             "mean": 0.25, "buckets": [1.0],
+                             "counts": [4, 0]}}},
+            "series": {"t": [0.0, 1.0],
+                       "gauges": {"serve.queue_depth": [1, 3]},
+                       "counters": {"serve.slo_hit.a": [0, 8]},
+                       "rates": {"serve.slo_hit.a": [0.0, 8.0]}},
+            "burn": {"firing": ["a"],
+                     "alerts": [{"t": 0.9, "kind": "fire", "tenant": "a",
+                                 "burn_long": 2.0, "burn_short": 6.0,
+                                 "budget_remaining": 0.0}]}}
+
+
+def test_sac_top_render_frame_shows_tenants_and_alerts():
+    frame = sac_top.render_frame(_scrape())
+    assert "serve.queue_depth" in frame
+    assert "FIRING" in frame                   # tenant a's burn state
+    assert "burn alerts" in frame
+    assert "serve.tta_exact_seconds" in frame
+    assert "\x1b" not in frame                 # frames are plain text
+
+
+def test_sac_top_live_once_headless(tmp_path, capsys):
+    path = tmp_path / "scrape.json"
+    path.write_text(json.dumps(_scrape()))
+    rc = sac_top.main(["live", "--file", str(path), "--once"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "sac_top" in out and "FIRING" in out
+
+
+def test_sac_top_attribution_cli(tmp_path, capsys):
+    report = {"requests": [
+        {"req_id": 0, "tenant": "t", "arrival": 0.0, "batch": 0,
+         "t_dispatch": 0.5, "t_target": 1.5, "t_done": 1.6,
+         "t_exact": 1.0, "slo_ok": False, "dropped": None}]}
+    rpath = tmp_path / "report.json"
+    rpath.write_text(json.dumps(report))
+    tpath = _synth_trace().save(str(tmp_path / "trace.json"))
+    rc = sac_top.main(["attribution", str(rpath), str(tpath)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "dominant phase: compute" in out
+    assert "top workers" in out
+    rc = sac_top.main(["attribution", str(rpath), str(tpath), "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["kind"] == "attribution-report"

@@ -1,0 +1,388 @@
+"""Live telemetry layer: time-series sampler, burn-rate alerts, exporter.
+
+The unit tests pin the math the dashboards depend on: bucket-interpolated
+histogram quantiles against exact percentiles, counter-rate first
+differences, the multi-window burn-rate crossing (both windows must
+exceed the threshold, with a minimum event floor and hysteresis on
+clear), and the Prometheus text exposition shape.  Integration tests run
+real serves — simulated and cluster — and assert the sampler ticks off
+the serving clock, the exporter answers live scrapes mid-serve, and the
+flight recorder embeds the pre-crash time-series window.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_parser, run_serve
+from repro.obs import (NULL_BURN, NULL_SAMPLER, BurnRateTracker,
+                       FlightRecorder, MetricsExporter, MetricsRegistry,
+                       TimeSeriesSampler, Tracer, prometheus_text)
+from repro.serving import (MasterScheduler, ServeConfig, SimulatedBackend,
+                           TenantSpec, build_workload, run_load)
+
+
+# ------------------------------------------------------------- quantiles
+
+def test_histogram_quantile_tracks_exact_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=tuple(np.linspace(0.01, 2.0, 200)))
+    rng = np.random.default_rng(17)
+    vals = rng.uniform(0.02, 1.8, size=2000)
+    for v in vals:
+        h.observe(v)
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(vals, q))
+        est = h.quantile(q)
+        # dense buckets: interpolation lands within one bucket width
+        assert est == pytest.approx(exact, abs=0.02), q
+
+
+def test_histogram_quantile_edges_and_snapshot_keys():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    assert h.quantile(0.5) is None             # empty histogram
+    for v in (0.01, 0.02, 0.03, 0.5):
+        h.observe(v)
+    # p0/p1 clamp to the observed extremes, not bucket bounds
+    assert h.quantile(0.0) == pytest.approx(0.01)
+    assert h.quantile(1.0) <= 1.0
+    v = h.to_value()
+    assert "p50" in v and "p99" in v
+    assert v["p50"] <= v["p99"]
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+
+
+def test_histogram_quantile_overflow_bucket_pins_to_observed_max():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(1.0,))
+    for v in (5.0, 7.0, 9.0):
+        h.observe(v)                           # all overflow
+    q = h.quantile(0.99)
+    assert 1.0 <= q <= 9.0
+
+
+# --------------------------------------------------------------- sampler
+
+def test_sampler_interval_gating_and_ring():
+    reg = MetricsRegistry()
+    c = reg.counter("x")
+    s = TimeSeriesSampler(reg, interval=0.25, capacity=4)
+    assert s.tick(0.0)                         # first tick always samples
+    assert not s.tick(0.125)                   # inside the interval
+    c.inc(2)
+    assert s.tick(0.25)
+    for t in (0.5, 0.75, 1.0, 1.25):
+        c.inc()
+        s.tick(t)
+    assert len(s) == 4                         # ring evicted the oldest
+    assert s.n_samples == 6                    # lifetime count keeps going
+    assert s.samples()[0]["t"] == pytest.approx(0.5)
+    assert [r["t"] for r in s.last(2)] == [pytest.approx(1.0),
+                                           pytest.approx(1.25)]
+
+
+def test_sampler_series_rates_are_per_second_first_differences():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.slo_hit.a")
+    s = TimeSeriesSampler(reg, interval=0.5)
+    s.tick(0.0)
+    c.inc(10)
+    s.tick(0.5)
+    c.inc(5)
+    s.tick(1.0)
+    ser = s.series()
+    assert ser["kind"] == "timeseries"
+    assert ser["counters"]["serve.slo_hit.a"] == [0.0, 10.0, 15.0]
+    assert ser["rates"]["serve.slo_hit.a"] == \
+        [0.0, pytest.approx(20.0), pytest.approx(10.0)]
+
+
+def test_sampler_backfills_instruments_born_mid_run():
+    reg = MetricsRegistry()
+    s = TimeSeriesSampler(reg, interval=0.1)
+    s.tick(0.0)
+    reg.counter("late").inc(4)
+    s.tick(0.2)
+    ser = s.series()
+    assert ser["counters"]["late"] == [0.0, 4.0]
+    assert ser["rates"]["late"][1] == pytest.approx(20.0)
+
+
+def test_sampler_validation_and_null():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="interval"):
+        TimeSeriesSampler(reg, interval=0.0)
+    with pytest.raises(ValueError, match="capacity"):
+        TimeSeriesSampler(reg, capacity=0)
+    assert not NULL_SAMPLER.enabled
+    assert NULL_SAMPLER.tick(1.0) is False
+    assert NULL_SAMPLER.series()["samples"] == 0
+
+
+# ------------------------------------------------------------- burn rate
+
+def _feed(bt, tenant, outcomes, t0=0.0, dt=0.1):
+    alerts = []
+    t = t0
+    for hit in outcomes:
+        a = bt.observe(tenant, hit, t)
+        if a is not None:
+            alerts.append(a)
+        t += dt
+    return alerts, t
+
+
+def test_burn_alert_requires_both_windows_and_min_events():
+    bt = BurnRateTracker(objective=0.9, window=6.0, min_events=10)
+    # 9 misses: under the event floor, must not fire however bad the burn
+    alerts, t = _feed(bt, "a", [False] * 9)
+    assert alerts == [] and bt.firing() == []
+    # the 10th miss crosses the floor with both windows saturated
+    a = bt.observe("a", False, t)
+    assert a is not None and a.kind == "fire" and bt.firing() == ["a"]
+    assert a.burn_long >= 1.0 and a.burn_short >= 1.0
+
+
+def test_burn_needs_short_window_too():
+    # long window full of old misses, short window clean: no alert — the
+    # short window is what makes the alert reset when the cause is fixed
+    bt = BurnRateTracker(objective=0.9, window=6.0, min_events=5)
+    _feed(bt, "a", [False] * 6, t0=0.0, dt=0.1)        # misses at t<0.6
+    bt._firing["a"] = False                            # reset mid-test
+    bt.alerts.clear()
+    alerts, _ = _feed(bt, "a", [True] * 20, t0=5.0, dt=0.05)
+    # short window (1s) sees only hits -> burn_short 0 -> no fire
+    assert all(a.kind != "fire" for a in alerts)
+
+
+def test_burn_clear_hysteresis():
+    bt = BurnRateTracker(objective=0.9, window=2.0, min_events=4,
+                         threshold=1.0, clear_frac=0.5)
+    alerts, t = _feed(bt, "a", [False] * 6, dt=0.1)
+    assert [a.kind for a in alerts] == ["fire"]
+    # recovery: hits dilute the windows; the alert clears only when BOTH
+    # burns drop below threshold * clear_frac, not at the first hit
+    alerts2, _ = _feed(bt, "a", [True] * 40, t0=t, dt=0.1)
+    kinds = [a.kind for a in alerts2]
+    assert kinds == ["clear"]
+    assert bt.firing() == []
+    # the clear did not happen on the very first hit
+    first_clear_t = alerts2[0].t
+    assert first_clear_t > t + 0.05
+
+
+def test_burn_tracker_exports_gauges_trace_and_flight(tmp_path):
+    reg = MetricsRegistry()
+    tr = Tracer()
+    fr = FlightRecorder(str(tmp_path / "f.json"), capacity=8)
+    bt = BurnRateTracker(objective=0.9, window=2.0, min_events=3,
+                         metrics=reg, tracer=tr, flight=fr)
+    _feed(bt, "vip", [False] * 4, dt=0.1)
+    g = reg.snapshot()["gauges"]
+    assert g["slo.burn_firing.vip"] == 1.0
+    assert g["slo.burn_long.vip"] >= 1.0
+    assert reg.snapshot()["counters"]["slo.burn_alerts.vip"] == 1
+    names = [e["name"] for e in tr.to_dict()["traceEvents"]
+             if e["ph"] == "i"]
+    assert "burn-fire" in names
+    dump = json.load(open(fr.dump("exception")))
+    kinds = [e["kind"] for e in dump["events"]]
+    assert "burn-alert" in kinds
+    d = bt.to_dict()
+    assert d["kind"] == "burn-report" and d["n_alerts"] == 1
+    assert d["firing"] == ["vip"]
+
+
+def test_burn_tracker_validation():
+    with pytest.raises(ValueError, match="objective"):
+        BurnRateTracker(objective=1.0)
+    with pytest.raises(ValueError, match="window"):
+        BurnRateTracker(window=0.0)
+    assert not NULL_BURN.enabled
+    assert NULL_BURN.observe("t", False, 0.0) is None
+
+
+# -------------------------------------------------------------- exporter
+
+def test_prometheus_text_shape():
+    reg = MetricsRegistry()
+    reg.counter("serve.slo_hit.interactive").inc(10)
+    reg.gauge("serve.queue_depth").set(3)
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 9.0):
+        h.observe(v)
+    text = prometheus_text(reg.snapshot())
+    assert "# TYPE sac_serve_slo_hit_interactive counter" in text
+    assert "sac_serve_slo_hit_interactive 10" in text
+    assert "# TYPE sac_serve_queue_depth gauge" in text
+    assert 'sac_lat_bucket{le="0.1"} 1' in text
+    assert 'sac_lat_bucket{le="1"} 2' in text          # cumulative
+    assert 'sac_lat_bucket{le="+Inf"} 3' in text
+    assert "sac_lat_count 3" in text
+    assert text.endswith("\n")
+
+
+def test_exporter_serves_metrics_and_json_on_ephemeral_port():
+    reg = MetricsRegistry()
+    reg.counter("pool.spawned").inc(4)
+    sampler = TimeSeriesSampler(reg, interval=0.1)
+    sampler.tick(0.0)
+    burn = BurnRateTracker(metrics=reg)
+    with MetricsExporter(reg, sampler=sampler, burn=burn, port=0) as exp:
+        assert exp.port > 0
+        with urllib.request.urlopen(f"{exp.url}/metrics", timeout=5) as r:
+            assert "version=0.0.4" in r.headers["Content-Type"]
+            text = r.read().decode()
+        assert "sac_pool_spawned 4" in text
+        with urllib.request.urlopen(f"{exp.url}/json", timeout=5) as r:
+            doc = json.load(r)
+        assert doc["kind"] == "metrics-scrape"
+        assert doc["snapshot"]["counters"]["pool.spawned"] == 4
+        assert doc["series"]["samples"] == 1
+        assert doc["burn"]["kind"] == "burn-report"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{exp.url}/nope", timeout=5)
+        assert exp.scrapes == 2
+    assert exp._server is None                 # stop() tore it down
+
+
+def test_exporter_json_truncates_series_tail():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    sampler = TimeSeriesSampler(reg, interval=0.01)
+    for i in range(20):
+        sampler.tick(i * 0.01)
+    exp = MetricsExporter(reg, sampler=sampler, series_tail=5)
+    doc = exp.json_payload()
+    assert len(doc["series"]["t"]) == 5
+    assert len(doc["series"]["counters"]["x"]) == 5
+
+
+# ------------------------------------------------- flight recorder series
+
+def test_flight_dump_embeds_timeseries_tail(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("x")
+    fr = FlightRecorder(str(tmp_path / "f.json"), capacity=8,
+                        series_tail=3)
+    sampler = TimeSeriesSampler(reg, interval=0.1)
+    fr.bind_sampler(sampler)
+    for i in range(6):
+        c.inc()
+        sampler.tick(i * 0.1)
+    fr.record("tick")
+    dump = json.load(open(fr.dump("exception")))
+    assert len(dump["series"]) == 3            # tail only
+    assert dump["series"][-1]["counters"]["x"] == 6
+    # the null sampler never binds: no series key
+    fr2 = FlightRecorder(str(tmp_path / "g.json"))
+    fr2.bind_sampler(NULL_SAMPLER)
+    fr2.record("tick")
+    assert "series" not in json.load(open(fr2.dump("exception")))
+
+
+# -------------------------------------------------- scheduler integration
+
+def _tenants():
+    return (TenantSpec("interactive", rows=16, inner=64, target_error=0.5,
+                       deadline=0.02, weight=1.0),)
+
+
+def test_open_loop_serve_ticks_sampler_on_virtual_clock():
+    reg = MetricsRegistry()
+    sampler = TimeSeriesSampler(reg, interval=0.05)
+    burn = BurnRateTracker(objective=0.9, window=2.0, min_events=4,
+                           metrics=reg)
+    code_cfg = ServeConfig(deadlines=(1.1, 1.6), seed=7, batch_size=2,
+                           queue_policy="edf", queue_limit=4,
+                           shed_expired=True)
+    from repro.core import LayerSACCode
+    sched = MasterScheduler(LayerSACCode(4, 8, base="ortho", eps=6.25e-3),
+                            SimulatedBackend(), code_cfg, metrics=reg,
+                            sampler=sampler, burn=burn)
+    wl = build_workload(_tenants(), rate=10.0, horizon=3.0, seed=5)
+    report = run_load(sched, wl, horizon=3.0, burn=burn)
+    assert len(sampler) > 5                    # the loop actually ticked
+    ts = [s["t"] for s in sampler.samples()]
+    assert ts == sorted(ts)                    # serving clock is monotone
+    # virtual clock: the series spans the workload horizon, not wall time
+    assert ts[-1] > 1.0
+    ser = sampler.series()
+    assert "serve.queue_depth" in ser["gauges"]
+    assert "serve.inflight_shards" in ser["gauges"]
+    # the 20ms deadline is unmeetable: every served request misses, so
+    # the burn alert must have fired and ride the load report
+    assert report.burn is not None and report.burn["n_alerts"] >= 1
+    assert "interactive" in report.burn["firing"]
+
+
+def test_closed_loop_serve_ticks_sampler_and_stamps_batches():
+    reg = MetricsRegistry()
+    sampler = TimeSeriesSampler(reg, interval=1e-6)
+    from repro.core import LayerSACCode
+    sched = MasterScheduler(LayerSACCode(4, 8, base="ortho", eps=6.25e-3),
+                            SimulatedBackend(),
+                            ServeConfig(deadlines=(1.1,), seed=7,
+                                        batch_size=2),
+                            metrics=reg, sampler=sampler)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        sched.submit(rng.standard_normal((16, 64)),
+                     rng.standard_normal((64, 16)))
+    results = sched.run()
+    assert all(r.batch is not None for r in results)
+    assert len({r.batch for r in results}) == 2
+    assert len(sampler) >= 2
+    ts = [s["t"] for s in sampler.samples()]
+    # the global serve clock advances monotonically across batches
+    assert ts == sorted(ts)
+    assert reg.snapshot()["gauges"]["serve.inflight_shards"] == 0
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_serve_parser_accepts_live_obs_flags():
+    args = build_parser().parse_args(
+        ["--sample-interval", "0.5", "--metrics-port", "0",
+         "--burn-alerts", "--burn-objective", "0.95",
+         "--burn-window", "10"])
+    assert args.sample_interval == 0.5
+    assert args.metrics_port == 0
+    assert args.burn_alerts and args.burn_objective == 0.95
+    d = build_parser().parse_args([])
+    assert d.sample_interval is None and d.metrics_port is None
+    assert not d.burn_alerts
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--sample-interval", "0"], "sample-interval"),
+    (["--metrics-port", "70000"], "metrics-port"),
+    (["--burn-objective", "0.5"], "burn-objective"),
+    (["--burn-window", "5"], "burn-window"),
+    (["--burn-alerts", "--burn-objective", "1.5"], "burn-objective"),
+])
+def test_serve_rejects_bad_live_obs_flags(argv, msg):
+    from repro.launch.serve import _collect_problems
+    problems = _collect_problems(build_parser().parse_args(argv))
+    assert any(msg in p for p in problems), problems
+
+
+def test_run_serve_with_live_obs_stack(tmp_path):
+    args = build_parser().parse_args(
+        ["--backend", "sim", "--requests", "4", "--batch-size", "2",
+         "--sample-interval", "0.05", "--metrics-port", "0",
+         "--burn-alerts", "--json"])
+    rep = run_serve(args)
+    ob = rep.observability
+    assert ob is not None
+    assert ob["sample_interval"] == 0.05
+    assert ob["samples"] >= 1
+    assert ob["metrics_port"] > 0              # ephemeral port was bound
+    assert ob["burn"]["objective"] == 0.9
+    # request dicts carry the attribution stamps
+    for r in rep.requests:
+        assert "batch" in r and "arrival" in r and "t_dispatch" in r
+        assert "slo_ok" in r and "tenant" in r

@@ -17,7 +17,10 @@ Checks, per the trace-event format:
   none, and requiring one is the classic false positive;
 * the trace contains at least one shard span and at least one instant
   (a milestone or decode-apply) — an empty-but-well-formed trace means the
-  tracer was never threaded through the serve.
+  tracer was never threaded through the serve;
+* every ``operand-ship`` / ``compute`` child span is *contained* within a
+  parent ``shard *`` span on the same tid and batch — a child poking out
+  of its parent means the backwards-anchoring arithmetic regressed.
 
 Usage: ``python tools/validate_trace.py TRACE.json [TRACE2.json ...]``
 Exits non-zero with a per-file message on the first failure.
@@ -29,6 +32,41 @@ import sys
 
 VALID_PHASES = {"X", "i", "M", "B", "E", "C"}
 INSTANT_SCOPES = {"g", "p", "t"}
+CHILD_SPANS = {"operand-ship", "compute"}
+# rounding slack: ts/dur are µs rounded to 3 decimals, so a child's edge
+# may poke out of its parent by at most one rounding step per endpoint
+CONTAIN_TOL_US = 0.5
+
+
+def check_containment(events: list) -> list[str]:
+    """Child spans must nest inside a same-tid, same-batch shard span."""
+    parents: dict[tuple, list[tuple]] = {}
+    children: list[tuple] = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or ev.get("ph") != "X":
+            continue
+        name = str(ev.get("name", ""))
+        ts, dur = ev.get("ts"), ev.get("dur")
+        if not isinstance(ts, (int, float)) \
+                or not isinstance(dur, (int, float)):
+            continue                       # already reported as bad ts/dur
+        batch = (ev.get("args") or {}).get("batch")
+        key = (ev.get("tid"), batch)
+        if name.startswith("shard "):
+            parents.setdefault(key, []).append((ts, ts + dur))
+        elif name in CHILD_SPANS:
+            children.append((i, name, key, ts, ts + dur))
+    problems = []
+    for i, name, key, lo, hi in children:
+        spans = parents.get(key, ())
+        if not any(p_lo - CONTAIN_TOL_US <= lo
+                   and hi <= p_hi + CONTAIN_TOL_US
+                   for p_lo, p_hi in spans):
+            tid, batch = key
+            problems.append(
+                f"traceEvents[{i}]: {name!r} span [{lo}, {hi}] not "
+                f"contained in any shard span on tid {tid} batch {batch}")
+    return problems
 
 
 def validate(path: str) -> list[str]:
@@ -83,6 +121,7 @@ def validate(path: str) -> list[str]:
     if n_instants == 0:
         problems.append("no instants (ph='i') — milestones/decode-apply "
                         "missing")
+    problems.extend(check_containment(events))
     return problems
 
 
